@@ -1,0 +1,54 @@
+"""Pallas kernel microbenchmarks (interpret mode) vs pure-jnp references.
+
+On CPU the interpret-mode timings measure the *reference semantics*, not TPU
+speed -- the derived column therefore reports the structural numbers that
+matter for the TPU target: FLOPs, ideal MXU-bound time on v5e, and the VMEM
+working set implied by the BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CSV, time_us
+from repro.kernels import ops, ref
+
+V5E_PEAK = 197e12
+
+
+def run(csv: CSV, *, fast: bool = False) -> None:
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+
+    # moe_ffn at a production-like per-device slice (scaled for CPU)
+    e, c, d, f = (4, 64, 256, 128) if fast else (8, 128, 512, 256)
+    xe = jax.random.normal(ks[0], (e, c, d), jnp.float32)
+    w1 = jax.random.normal(ks[1], (e, d, 2 * f), jnp.float32) * 0.05
+    w2 = jax.random.normal(ks[2], (e, f, d), jnp.float32) * 0.05
+    flops = 2 * e * c * d * 2 * f + 2 * e * c * f * d
+    us_k = time_us(lambda: ops.moe_ffn(xe, w1, w2), iters=3)
+    us_r = time_us(jax.jit(ref.moe_ffn_ref), xe, w1, w2, iters=3)
+    vmem = (c * d + d * 2 * 256 + 256 * d) * 4 / 2**20
+    csv.add("kernels/moe_ffn_pallas_interp", us_k,
+            f"flops={flops:.3g};v5e_mxu_bound_us={flops / V5E_PEAK * 1e6:.2f};"
+            f"vmem_tile_mib={vmem:.1f}")
+    csv.add("kernels/moe_ffn_jnp_ref", us_r, f"flops={flops:.3g}")
+
+    # flash attention
+    b, hq, hkv, s, hd = (1, 2, 1, 256, 64) if fast else (2, 4, 2, 512, 64)
+    q = jax.random.normal(ks[3], (b, hq, s, hd), jnp.float32)
+    k = jax.random.normal(ks[4], (b, hkv, s, hd), jnp.float32)
+    v = jax.random.normal(ks[0], (b, hkv, s, hd), jnp.float32)
+    flops = 2 * 2 * b * hq * s * s * hd // 2  # causal
+    us_k = time_us(lambda: ops.flash_attention_bhsd(q, k, v, block_q=128,
+                                                    block_k=128), iters=3)
+    us_r = time_us(jax.jit(ref.flash_attention_ref), q, k, v, iters=3)
+    csv.add("kernels/flash_attn_pallas_interp", us_k,
+            f"flops={flops:.3g};v5e_mxu_bound_us={flops / V5E_PEAK * 1e6:.2f}")
+    csv.add("kernels/flash_attn_jnp_ref", us_r, f"flops={flops:.3g}")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    run(c)

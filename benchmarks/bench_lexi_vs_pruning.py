@@ -1,0 +1,89 @@
+"""Paper Figs. 4-7: LExI vs inter/intra pruning on quality-vs-throughput.
+
+The paper's accuracy suites need real checkpoints; our quality proxy is
+held-out perplexity of a small MoE trained from scratch on structured
+synthetic data (DESIGN.md §2).  Throughput is the measured wall-time of the
+jitted full-model forward (decode-shaped workloads are covered by
+bench_roofline + §Perf).
+
+Methods compared at matched active-expert budgets:
+  baseline          uniform pretrained top-k
+  lexi_dp/ea        per-layer plans from Alg. 1+2 (DP exact / EA faithful)
+  uniform_k         uniform top-k reduction (ablation: LExI minus layer-adaptivity)
+  inter_prune       NAEE-style expert removal
+  intra_prune       MoE-I^2-style FFN-dim reduction
+  dyn_skip          NAEE dynamic skipping (tau)
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import CSV, time_us, trained_tiny_moe
+from repro import models
+from repro.core import (
+    apply_plan_params,
+    inter_prune,
+    intra_prune,
+    optimize,
+    profile_sensitivity,
+    with_dynamic_skipping,
+)
+from repro.training import eval_perplexity
+
+
+def _throughput_us(cfg, params, batch):
+    fn = jax.jit(lambda p, b: models.loss_fn(p, cfg, b)[1]["xent"])
+    return time_us(fn, params, batch, iters=5)
+
+
+def run(csv: CSV, *, fast: bool = False) -> None:
+    cfg, params, dc, _ = trained_tiny_moe(steps=60 if fast else 300)
+    from repro.data import sample_batch
+    batch = sample_batch(dc, 99_999)
+
+    def report(name, cfg_, params_, extra=""):
+        us = _throughput_us(cfg_, params_, batch)
+        ppl = eval_perplexity(params_, cfg_, dc, steps=2 if fast else 6)
+        csv.add(f"fig4/{name}", us, f"ppl={ppl:.3f};{extra}")
+        return us, ppl
+
+    base_us, base_ppl = report(
+        f"baseline_top{cfg.moe_top_k}", cfg, params,
+        f"active_frac=1.00")
+
+    # one profiling pass feeds every LExI budget
+    table = profile_sensitivity(params, cfg, n_iter=4 if fast else 12,
+                                batch=2, seq=32)
+    n = cfg.num_moe_layers
+    budgets = [int(round(f * n * cfg.moe_top_k)) for f in (0.5, 0.625, 0.75)]
+    for b in budgets:
+        for method in (("dp",) if fast else ("dp", "evolutionary")):
+            plan = optimize(params, cfg, b, method=method, table=table)
+            cfg_l, params_l = apply_plan_params(params, cfg, plan)
+            report(f"lexi_{method}_B{b}", cfg_l, params_l,
+                   f"active_frac={plan.active_fraction():.3f};plan={plan.plan}")
+
+    for k in range(1, cfg.moe_top_k):
+        cfg_u = cfg.with_lexi_plan((k,) * n)
+        report(f"uniform_top{k}", cfg_u, params,
+               f"active_frac={k / cfg.moe_top_k:.3f}")
+
+    for frac in (0.25, 0.5):
+        p2, cfg2 = inter_prune(params, cfg, frac)
+        report(f"inter_prune_{frac:.3g}", cfg2, p2,
+               f"experts={cfg2.num_experts}")
+    for frac in (0.25, 0.5):
+        p2, cfg2 = intra_prune(params, cfg, frac)
+        report(f"intra_prune_{frac:.3g}", cfg2, p2, f"d_ff={cfg2.moe_d_ff}")
+
+    for tau in (0.3, 0.6):
+        cfg_s = with_dynamic_skipping(cfg, tau)
+        report(f"dyn_skip_tau{tau}", cfg_s, params, "shape_static=no")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    run(c)

@@ -1,0 +1,59 @@
+"""Paper Fig. 2: throughput vs active experts under inter/intra pruning.
+
+Reproduces the paper's core hardware observation (claim C1) on the MoE layer
+itself: with capacity-based dispatch, *inter* pruning removes experts but the
+routed top-k (and hence total expert work ~ T*k) is unchanged -- surviving
+experts just absorb more tokens; *intra* pruning shrinks each expert; only
+reducing top-k (LExI's lever) cuts work proportionally.
+
+Measured as wall-time of the jitted MoE layer on CPU; the structural FLOPs
+column shows the same effect analytically (what the H100 saw in the paper,
+the v5e roofline sees via the dry-run).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CSV, time_us
+from repro import models
+from repro.configs import get_config
+from repro.core import inter_prune, intra_prune, iter_moe_layer_params
+from repro.core.plan import moe_ffn_flops_per_token
+from repro.models.moe import moe_dense
+
+
+def run(csv: CSV, *, tokens: int = 2048, fast: bool = False) -> None:
+    cfg = get_config("olmoe-1b-7b").reduced().with_(
+        num_experts=16, moe_top_k=8, moe_d_ff=128, d_model=256,
+        dtype="float32")
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+    _, mp = next(iter_moe_layer_params(params, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (tokens, cfg.d_model))
+
+    def bench(name, mp_, cfg_, k):
+        fn = jax.jit(lambda p, xx: moe_dense(p, cfg_, xx, k)[0])
+        us = time_us(fn, mp_, x, iters=3 if fast else 10)
+        flops = moe_ffn_flops_per_token(
+            cfg_.with_(block_pattern=None), (k,) * cfg_.num_moe_layers)
+        csv.add(f"fig2/{name}", us,
+                f"flops_per_tok={flops / cfg_.num_moe_layers:.3g}")
+
+    bench(f"baseline_top{cfg.moe_top_k}", mp, cfg, cfg.moe_top_k)
+    for frac in (0.125, 0.25, 0.5):
+        p2, cfg2 = inter_prune(params, cfg, frac)
+        _, mp2 = next(iter_moe_layer_params(p2, cfg2))
+        bench(f"inter_prune_{frac:.3g}", mp2, cfg2, cfg2.moe_top_k)
+    for frac in (0.125, 0.25, 0.5):
+        p2, cfg2 = intra_prune(params, cfg, frac)
+        _, mp2 = next(iter_moe_layer_params(p2, cfg2))
+        bench(f"intra_prune_{frac:.3g}", mp2, cfg2, cfg2.moe_top_k)
+    for k in range(1, cfg.moe_top_k + 1):
+        bench(f"topk_{k}", mp, cfg, k)
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    run(c)

@@ -1,0 +1,90 @@
+"""§Roofline driver: aggregate dry-run records into the 40-cell table.
+
+Reads ``experiments/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
+emits one row per (arch x shape x mesh) with the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+
+Run the dry-run first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import CSV
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(d: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(csv: CSV, *, fast: bool = False) -> None:
+    recs = load_records()
+    if not recs:
+        csv.add("roofline/missing", 0.0,
+                "run repro.launch.dryrun --all --mesh both --out experiments/dryrun")
+        return
+    n_ok = n_skip = n_fail = 0
+    for r in recs:
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "SKIP":
+            n_skip += 1
+            csv.add(f"roofline/{cell}", 0.0, f"SKIP:{r['reason'][:60]}")
+            continue
+        if r["status"] != "OK":
+            n_fail += 1
+            csv.add(f"roofline/{cell}", 0.0, f"FAIL:{r.get('error','')[:60]}")
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        bound_us = rl["bound_time_s"] * 1e6
+        csv.add(
+            f"roofline/{cell}", bound_us,
+            f"dominant={rl['dominant']};"
+            f"t_comp={rl['t_compute']:.3e};t_mem={rl['t_memory']:.3e};"
+            f"t_coll={rl['t_collective']:.3e};"
+            f"useful={rl['useful_flops_ratio']:.3f};"
+            f"roofline_frac={rl['roofline_fraction']:.4f}")
+    csv.add("roofline/summary", 0.0,
+            f"ok={n_ok};skip={n_skip};fail={n_fail}")
+
+
+def markdown_table(d: str = DRYRUN_DIR) -> str:
+    """Markdown §Roofline table for EXPERIMENTS.md."""
+    rows = ["| arch | shape | mesh | t_compute | t_memory | t_collective | "
+            "dominant | MODEL/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load_records(d):
+        if r["status"] == "SKIP":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"SKIP | | | | | ({r['reason'][:48]}...) |")
+            continue
+        if r["status"] != "OK":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL | | | | | |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['t_compute']:.3e}s | {rl['t_memory']:.3e}s "
+            f"| {rl['t_collective']:.3e}s | **{rl['dominant']}** "
+            f"| {rl['useful_flops_ratio']:.2f} "
+            f"| {rl['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    run(c)

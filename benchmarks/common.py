@@ -1,0 +1,64 @@
+"""Shared benchmark utilities: timing, CSV emission, tiny trained MoE."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def time_us(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall time of a jitted call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+class CSV:
+    """Collects ``name,us_per_call,derived`` rows (assignment format)."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us: float, derived: str = "") -> None:
+        self.rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    def header(self) -> None:
+        print("name,us_per_call,derived", flush=True)
+
+
+# --------------------------------------------------------------------------- #
+# Tiny trained MoE shared by the quality-proxy benches
+# --------------------------------------------------------------------------- #
+
+_CACHE: Dict[str, Tuple] = {}
+
+
+def trained_tiny_moe(steps: int = 200, seed: int = 0):
+    """Train a small OLMoE-family model on synthetic data; cached per run."""
+    key = f"moe-{steps}-{seed}"
+    if key in _CACHE:
+        return _CACHE[key]
+    from repro.configs import get_config
+    from repro.data import DataConfig
+    from repro.optim import AdamW
+    from repro.training import train
+
+    cfg = get_config("olmoe-1b-7b").reduced().with_(
+        num_layers=4, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+        num_experts=8, moe_top_k=4, moe_d_ff=128, vocab_size=512,
+        vocab_pad_multiple=16, dtype="float32", moe_capacity_factor=2.0)
+    dc = DataConfig(cfg.vocab_size, seq_len=64, global_batch=16, seed=seed)
+    res = train(cfg, dc, total_steps=steps,
+                optimizer=AdamW(peak_lr=2e-3, total_steps=steps,
+                                warmup_steps=max(steps // 10, 5)))
+    _CACHE[key] = (cfg, res.state.params, dc, res)
+    return _CACHE[key]

@@ -1,0 +1,10 @@
+"""Pytest bootstrap: make `repro` (src layout) and `benchmarks` importable
+regardless of how pytest is invoked."""
+
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,60 @@
+"""Train an LM end to end with the full substrate: synthetic pipeline,
+AdamW, checkpointing + auto-resume, straggler watchdog, held-out eval.
+
+Default is a CPU-friendly ~3M-param model for a quick demonstration; pass
+``--params 100m`` for the ~100M-parameter configuration (same code path --
+on TPU this is the production trainer; on this CPU container expect minutes
+per step at 100m scale).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 200   # resumes!
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.optim import AdamW
+from repro.training import eval_perplexity, train
+
+
+def build_cfg(scale: str):
+    base = get_config("olmo-1b")
+    if scale == "100m":
+        # ~100M params: 12L x 768 (GPT-2-small-like geometry, SwiGLU)
+        return base.with_(num_layers=12, d_model=768, num_heads=12,
+                          num_kv_heads=12, head_dim=64, d_ff=2048,
+                          vocab_size=32000, vocab_pad_multiple=128,
+                          dtype="float32")
+    return base.reduced().with_(num_layers=4, d_model=256, num_heads=4,
+                                num_kv_heads=4, head_dim=64, d_ff=512,
+                                vocab_size=2048, vocab_pad_multiple=64,
+                                dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--params", choices=["3m", "100m"], default="3m")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.params)
+    print(f"training {cfg.param_count():,}-param {cfg.name}-family model")
+    dc = DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0)
+    res = train(
+        cfg, dc, total_steps=args.steps,
+        optimizer=AdamW(peak_lr=1e-3, total_steps=args.steps,
+                        warmup_steps=max(args.steps // 20, 5)),
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, verbose=True)
+    print(f"\nsteps run now: {res.steps_run} (resumed from "
+          f"{res.resumed_from})  stragglers: {res.straggler_steps}")
+    ppl = eval_perplexity(res.state, cfg, dc, steps=8)
+    print(f"held-out perplexity: {ppl:.3f} "
+          f"(untrained baseline ~= vocab {cfg.vocab_size})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""§Perf hillclimb driver: named optimization variants for the three chosen
+cells, each re-lowered + re-analyzed through the dry-run machinery.
+
+    PYTHONPATH=src python experiments/perf/hillclimb.py [--cell A|B|C|all]
+
+Variants and their hypotheses live here; the narrative (napkin math,
+predictions, confirm/refute) is recorded in EXPERIMENTS.md §Perf.
+Records land in experiments/perf/*.json.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import sys       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = os.path.dirname(os.path.abspath(__file__))
+
+# (tag, kwargs) per variant; kwargs forwarded to run_cell
+CELLS = {
+    # -- A: qwen3-moe-235b-a22b x train_4k (paper-representative) ----------- #
+    "A": ("qwen3-moe-235b-a22b", "train_4k", [
+        ("A0_baseline_remat_full", {}),
+        ("A1_remat_dots", {"opts_kw": {"remat": "dots"}}),
+        ("A2_remat_none", {"opts_kw": {"remat": "none"}}),
+        ("A3_attn_bf16", {"opts_kw": {"remat": "dots",
+                                      "attn_compute_dtype": "bf16_accum32"}}),
+        ("A4_lexi_b050", {"opts_kw": {"remat": "dots",
+                                      "attn_compute_dtype": "bf16_accum32"},
+                          "lexi_budget_frac": 0.5}),
+        ("A5_capacity_1.0", {"opts_kw": {"remat": "dots",
+                                         "attn_compute_dtype": "bf16_accum32"},
+                             "cfg_overrides": {"moe_capacity_factor": 1.0}}),
+        ("A6_a2a_chunks4", {"opts_kw": {"remat": "dots",
+                                        "attn_compute_dtype": "bf16_accum32",
+                                        "a2a_chunks": 4}}),
+        # feasibility: TP-only weights are 29.4GB/chip (>16GB HBM) -> FSDP
+        ("A7_fsdp", {"opts_kw": {"remat": "full",
+                                 "attn_compute_dtype": "bf16_accum32",
+                                 "fsdp_params": True},
+                     "cfg_overrides": {"moe_capacity_factor": 1.0}}),
+        ("A8_fsdp_lexi_b050", {"opts_kw": {"remat": "full",
+                                           "attn_compute_dtype": "bf16_accum32",
+                                           "fsdp_params": True},
+                               "cfg_overrides": {"moe_capacity_factor": 1.0},
+                               "lexi_budget_frac": 0.5}),
+        # activation memory: 41.7GiB/dev -> grad accumulation
+        ("A9_fsdp_micro4", {"opts_kw": {"remat": "full",
+                                        "attn_compute_dtype": "bf16_accum32",
+                                        "fsdp_params": True,
+                                        "microbatches": 4},
+                            "cfg_overrides": {"moe_capacity_factor": 1.0}}),
+        ("A10_fsdp_micro8", {"opts_kw": {"remat": "full",
+                                         "attn_compute_dtype": "bf16_accum32",
+                                         "fsdp_params": True,
+                                         "microbatches": 8},
+                             "cfg_overrides": {"moe_capacity_factor": 1.0}}),
+        # activation stash: 94 boundaries x 512MB -> chunked remat
+        ("A11_fsdp_chunk8", {"opts_kw": {"remat": "full",
+                                         "attn_compute_dtype": "bf16_accum32",
+                                         "fsdp_params": True,
+                                         "remat_chunk": 8},
+                             "cfg_overrides": {"moe_capacity_factor": 1.0}}),
+        ("A12_fsdp_chunk8_lexi", {"opts_kw": {"remat": "full",
+                                              "attn_compute_dtype": "bf16_accum32",
+                                              "fsdp_params": True,
+                                              "remat_chunk": 8},
+                                  "cfg_overrides": {"moe_capacity_factor": 1.0},
+                                  "lexi_budget_frac": 0.5}),
+    ]),
+    # -- B: qwen3-32b x decode_32k (worst roofline fraction at scale) -------- #
+    "B": ("qwen3-32b", "decode_32k", [
+        ("B0_baseline", {}),
+        ("B1_seqshard_kv", {"opts_kw": {"decode_kv_seq_shard": True}}),
+        ("B2_seqshard_bf16", {"opts_kw": {"decode_kv_seq_shard": True,
+                                          "attn_compute_dtype": "bf16_accum32"}}),
+        ("B3_seqshard_bf16_unroll", {"opts_kw": {
+            "decode_kv_seq_shard": True,
+            "attn_compute_dtype": "bf16_accum32",
+            "scan_unroll": True}}),
+        ("B4_seqshard_bf16_fsdp", {"opts_kw": {
+            "decode_kv_seq_shard": True,
+            "attn_compute_dtype": "bf16_accum32",
+            "fsdp_params": True}}),
+    ]),
+    # -- C: h2o-danube-1.8b x long_500k (most collective-bound) -------------- #
+    "C": ("h2o-danube-1.8b", "long_500k", [
+        ("C0_baseline", {}),
+        ("C1_seqshard_kv", {"opts_kw": {"decode_kv_seq_shard": True}}),
+        ("C2_seqshard_bf16", {"opts_kw": {"decode_kv_seq_shard": True,
+                                          "attn_compute_dtype": "bf16_accum32"}}),
+        ("C3_seqshard_bf16_unroll", {"opts_kw": {
+            "decode_kv_seq_shard": True,
+            "attn_compute_dtype": "bf16_accum32",
+            "scan_unroll": True}}),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all", choices=["A", "B", "C", "all"])
+    ap.add_argument("--variant", default=None, help="run a single tag")
+    args = ap.parse_args()
+    cells = CELLS if args.cell == "all" else {args.cell: CELLS[args.cell]}
+    for cid, (arch, shape, variants) in cells.items():
+        for tag, kw in variants:
+            if args.variant and tag != args.variant:
+                continue
+            rec = run_cell(arch, shape, out_dir=OUT, tag=tag, **kw)
+            if rec["status"] == "OK":
+                r = rec["roofline"]
+                print(f"  -> {tag}: dom={r['dominant']} "
+                      f"t=({r['t_compute']:.3e},{r['t_memory']:.3e},"
+                      f"{r['t_collective']:.3e}) "
+                      f"frac={r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

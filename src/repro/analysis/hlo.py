@@ -1,0 +1,104 @@
+"""Post-SPMD HLO parsing: collective operand bytes per op kind.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled (partitioned) HLO text.  Shapes in the per-device module are already
+per-device shard shapes.  Operand bytes per op follow the op semantics:
+
+    all-reduce          operand == result
+    all-to-all          operand == result
+    collective-permute  operand == result
+    all-gather          operand == result / group_size
+    reduce-scatter      operand == result * group_size
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Results may be single shapes or tuples (XLA's combiners emit e.g.
+#   %ar = (f32[8]{0}, f32[4]{0}) all-reduce(%a, %b), ...
+# and shard_map all-to-alls are tuple-shaped).  Match the op, then sum every
+# shape in the result portion of the line.
+_OP_RX = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[.*?)\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RX = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_GROUPS_RX = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RX = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RX.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RX.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    """Per-device collective traffic summed over the module."""
+
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}: n={self.count_by_kind[k]} "
+                 f"bytes={self.bytes_by_kind[k]:,}"
+                 for k in sorted(self.bytes_by_kind)]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    by_bytes: Dict[str, int] = defaultdict(int)
+    by_count: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RX.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":       # async pair: count the -start only
+            continue
+        result_str, kind = m.group(1), m.group(2)
+        result = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RX.findall(result_str))
+        if kind == "all-gather":
+            operand = result // max(_group_size(line), 1)
+        elif kind == "reduce-scatter":
+            operand = result * _group_size(line)
+        else:
+            operand = result
+        by_bytes[kind] += operand
+        by_count[kind] += 1
+    return CollectiveStats(dict(by_bytes), dict(by_count))

@@ -1,0 +1,179 @@
+"""Three-term roofline from the compiled dry-run artifact (no hardware).
+
+    compute term    = HLO_FLOPs_per_device        / peak_FLOP/s
+    memory term     = HLO_bytes_per_device        / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` on the partitioned module reports *per-device* numbers
+(the module is the per-device program), so dividing by per-chip peaks gives
+the per-step time bound directly; the assignment's formulation
+(global / (chips x peak)) is identical because global = per_device x chips.
+
+MODEL_FLOPS uses 6*N*D (train, dense), 6*N_active*D (train, MoE) and
+2*N_active*D (forward-only serve steps); the ratio MODEL_FLOPS / HLO_FLOPs
+exposes remat / redundant compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.analysis.hlo import CollectiveStats, collective_stats
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.core.plan import model_flops_per_token
+
+#: TPU v5e per-chip constants (assignment-specified)
+HW = {
+    "peak_flops": 197e12,   # bf16 FLOP/s
+    "hbm_bw": 819e9,        # bytes/s
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw per-device measurements
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, int]
+    # derived terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    # usefulness
+    model_flops_global: float
+    useful_flops_ratio: float
+    # memory
+    bytes_per_device: Optional[float] = None
+    note: str = ""
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def roofline_fraction(self) -> float:
+        """Fraction of the step bound that is useful compute at peak."""
+        if self.bound_time <= 0:
+            return 0.0
+        t_useful = (self.model_flops_global / self.chips) / HW["peak_flops"]
+        return t_useful / self.bound_time
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["bound_time_s"] = self.bound_time
+        d["roofline_fraction"] = self.roofline_fraction()
+        return d
+
+
+def model_flops_for_cell(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Global MODEL_FLOPS for one step of this cell."""
+    fwd_per_token = model_flops_per_token(cfg, cfg.lexi_plan)
+    if shape.step == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 3.0 * fwd_per_token * tokens          # fwd + 2x bwd = 6ND
+    if shape.step == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return fwd_per_token * tokens                # 2ND forward-only
+    # decode: one token per sequence
+    return fwd_per_token * shape.global_batch
+
+
+@dataclass
+class CellCosts:
+    """Per-device cost triple extracted from one compiled module."""
+
+    flops: float
+    nbytes: float
+    coll_bytes: Dict[str, float]
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def __sub__(self, o: "CellCosts") -> "CellCosts":
+        keys = set(self.coll_bytes) | set(o.coll_bytes)
+        return CellCosts(
+            self.flops - o.flops, self.nbytes - o.nbytes,
+            {k: self.coll_bytes.get(k, 0.0) - o.coll_bytes.get(k, 0.0)
+             for k in keys})
+
+    def scaled_add(self, o: "CellCosts", c: float) -> "CellCosts":
+        keys = set(self.coll_bytes) | set(o.coll_bytes)
+        return CellCosts(
+            self.flops + max(o.flops, 0.0) * c,
+            self.nbytes + max(o.nbytes, 0.0) * c,
+            {k: self.coll_bytes.get(k, 0.0)
+             + max(o.coll_bytes.get(k, 0.0), 0.0) * c for k in keys})
+
+
+def costs_from_compiled(compiled, hlo_text: Optional[str] = None) -> CellCosts:
+    ca = compiled.cost_analysis()
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_stats(text)
+    return CellCosts(float(ca.get("flops", 0.0)),
+                     float(ca.get("bytes accessed", 0.0)),
+                     {k: float(v) for k, v in coll.bytes_by_kind.items()})
+
+
+def device_memory(compiled) -> Optional[float]:
+    try:
+        ma = compiled.memory_analysis()
+        return float(getattr(ma, "temp_size_in_bytes", 0)
+                     + getattr(ma, "argument_size_in_bytes", 0)
+                     + getattr(ma, "output_size_in_bytes", 0)
+                     - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        return None
+
+
+def analyze_costs(
+    costs: CellCosts,
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    *,
+    chips: int,
+    mesh_desc: str,
+    hw: Dict = HW,
+    bytes_per_device: Optional[float] = None,
+    note: str = "",
+) -> RooflineReport:
+    t_c = costs.flops / hw["peak_flops"]
+    t_m = costs.nbytes / hw["hbm_bw"]
+    t_x = costs.coll_total / hw["ici_bw"]
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_for_cell(cfg, shape)
+    ratio = mf / max(costs.flops * chips, 1.0)
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_desc, chips=chips,
+        hlo_flops=costs.flops, hlo_bytes=costs.nbytes,
+        collective_bytes=costs.coll_total,
+        collective_breakdown={k: int(v) for k, v in costs.coll_bytes.items()},
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, dominant=dom,
+        model_flops_global=mf, useful_flops_ratio=ratio,
+        bytes_per_device=bytes_per_device, note=note,
+    )
+
+
+def analyze(compiled, cfg: ModelConfig, shape: ShapeSpec, *, chips: int,
+            mesh_desc: str, hw: Dict = HW, hlo_text: Optional[str] = None,
+            note: str = "") -> RooflineReport:
+    """Single-module analysis (exact only if the module has no scans)."""
+    return analyze_costs(costs_from_compiled(compiled, hlo_text), cfg, shape,
+                         chips=chips, mesh_desc=mesh_desc, hw=hw,
+                         bytes_per_device=device_memory(compiled), note=note)
+
+
+def save_report(report: RooflineReport, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report.to_json(), f, indent=1)

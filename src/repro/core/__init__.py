@@ -1,0 +1,21 @@
+"""LExI core: the paper's contribution as a composable module."""
+from repro.core.apply import apply_plan_params, lexi_config, optimize  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    LexiPlan,
+    apply_plan,
+    model_flops_per_token,
+    moe_ffn_flops_per_token,
+    uniform_plan,
+)
+from repro.core.pruning import inter_prune, intra_prune  # noqa: F401
+from repro.core.search import (  # noqa: F401
+    SearchResult,
+    dp_optimal,
+    evolutionary_search,
+)
+from repro.core.sensitivity import (  # noqa: F401
+    SensitivityTable,
+    iter_moe_layer_params,
+    profile_sensitivity,
+)
+from repro.core.skipping import expected_skip_rate, with_dynamic_skipping  # noqa: F401

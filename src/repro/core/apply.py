@@ -1,0 +1,67 @@
+"""End-to-end LExI pipeline: profile -> search -> plan -> config."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.plan import LexiPlan, apply_plan
+from repro.core.search import SearchResult, dp_optimal, evolutionary_search
+from repro.core.sensitivity import SensitivityTable, profile_sensitivity
+
+
+def optimize(
+    params: Dict,
+    cfg: ModelConfig,
+    budget: int,
+    *,
+    method: str = "evolutionary",
+    n_iter: int = 16,
+    profile_batch: int = 4,
+    profile_seq: int = 64,
+    k_min: int = 1,
+    seed: int = 0,
+    table: Optional[SensitivityTable] = None,
+    **search_kw,
+) -> LexiPlan:
+    """Run the full LExI pipeline and return a deployable plan.
+
+    ``budget`` is the total number of active experts across all MoE layers
+    (paper's B).  Pass a precomputed ``table`` to skip Stage 1.
+    """
+    if table is None:
+        table = profile_sensitivity(
+            params, cfg, n_iter=n_iter, batch=profile_batch, seq=profile_seq,
+            key=jax.random.PRNGKey(seed))
+    if method == "evolutionary":
+        res: SearchResult = evolutionary_search(table, budget, k_min=k_min,
+                                                seed=seed, **search_kw)
+    elif method == "dp":
+        res = dp_optimal(table, budget, k_min=k_min, **search_kw)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return LexiPlan(arch=cfg.name, budget=budget, plan=res.plan,
+                    fitness=res.fitness, method=method, k_base=cfg.moe_top_k)
+
+
+def apply_plan_params(params: Dict, cfg: ModelConfig, plan: LexiPlan):
+    """Apply a plan to BOTH config and params.
+
+    A non-uniform plan changes the layer *grouping* (DESIGN.md: consecutive
+    equal-k runs are scanned together), so the stacked parameter tree must be
+    re-sliced to match.  Returns (cfg_with_plan, regrouped_params).
+    """
+    from repro.models.blocks import regroup_stack
+    cfg2 = apply_plan(cfg, plan)
+    new_params = dict(params)
+    new_params["stack"] = regroup_stack(params["stack"], cfg.pattern(),
+                                        cfg2.pattern())
+    return cfg2, new_params
+
+
+def lexi_config(params: Dict, cfg: ModelConfig, budget: int,
+                **kw) -> ModelConfig:
+    """Convenience: config with the optimized per-layer plan applied."""
+    return apply_plan(cfg, optimize(params, cfg, budget, **kw))

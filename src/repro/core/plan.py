@@ -1,0 +1,79 @@
+"""LExI plan artifact: the deployable output of the two-stage pipeline."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class LexiPlan:
+    arch: str
+    budget: int
+    plan: Tuple[int, ...]          # per-MoE-layer top-k
+    fitness: float                 # sum of proxy losses
+    method: str                    # "evolutionary" | "dp" | "uniform"
+    k_base: int
+
+    @property
+    def avg_k(self) -> float:
+        return sum(self.plan) / len(self.plan)
+
+    def active_fraction(self) -> float:
+        """Fraction of baseline expert activations kept."""
+        return sum(self.plan) / (self.k_base * len(self.plan))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(dataclasses.asdict(self), f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "LexiPlan":
+        with open(path) as f:
+            d = json.load(f)
+        d["plan"] = tuple(d["plan"])
+        return cls(**d)
+
+
+def uniform_plan(cfg: ModelConfig, k: int) -> LexiPlan:
+    n = cfg.num_moe_layers
+    return LexiPlan(arch=cfg.name, budget=k * n, plan=(k,) * n,
+                    fitness=float("nan"), method="uniform", k_base=cfg.moe_top_k)
+
+
+def apply_plan(cfg: ModelConfig, plan: LexiPlan) -> ModelConfig:
+    if plan.arch != cfg.name:
+        raise ValueError(f"plan for {plan.arch} applied to {cfg.name}")
+    return cfg.with_lexi_plan(plan.plan)
+
+
+# --------------------------------------------------------------------------- #
+# Analytic cost model (used by benchmarks to place plans on a FLOPs axis)
+# --------------------------------------------------------------------------- #
+
+
+def moe_ffn_flops_per_token(cfg: ModelConfig,
+                            plan: Optional[Tuple[int, ...]] = None) -> float:
+    """Forward FLOPs/token spent in MoE expert FFNs (+ shared experts)."""
+    ks = plan if plan is not None else (cfg.moe_top_k,) * cfg.num_moe_layers
+    per_k = 2 * 3 * cfg.d_model * cfg.moe_d_ff        # gate+up+down matmuls
+    total = sum(ks) * per_k
+    if cfg.num_shared_experts:
+        sf = cfg.shared_expert_d_ff or cfg.moe_d_ff * cfg.num_shared_experts
+        total += cfg.num_moe_layers * 2 * 3 * cfg.d_model * sf
+    return float(total)
+
+
+def model_flops_per_token(cfg: ModelConfig,
+                          plan: Optional[Tuple[int, ...]] = None) -> float:
+    """Forward FLOPs/token for the whole model (2 * active params heuristic,
+    with the MoE part made plan-aware)."""
+    base = 2.0 * cfg.param_count(active_only=True)
+    if cfg.is_moe:
+        base -= moe_ffn_flops_per_token(cfg)          # remove baseline MoE part
+        base += moe_ffn_flops_per_token(cfg, plan)
+    return base

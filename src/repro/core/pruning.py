@@ -1,0 +1,155 @@
+"""Baseline MoE compression methods the paper compares against.
+
+``inter_prune``  NAEE-style expert removal (Lu et al. 2024): drop whole
+                 experts + their router columns; routing still selects the
+                 same top-k among survivors.  This is the method whose
+                 load-imbalance pathology the paper demonstrates (Fig. 2).
+
+``intra_prune``  MoE-I^2-style inner-dimension pruning (Yang et al. 2024):
+                 shrink each expert's FFN hidden size, keep the expert count.
+
+Both are implemented data-free (weight-magnitude / router Monte-Carlo
+scoring) to match this framework's deployment constraint; NAEE's original
+calibration-set scoring is noted in DESIGN.md as the upstream difference.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import group_pattern
+
+
+# --------------------------------------------------------------------------- #
+# Expert scoring
+# --------------------------------------------------------------------------- #
+
+
+def _expert_scores_weight_norm(moe_params: Dict) -> np.ndarray:
+    """Data-free: importance = ||w1_e||_F * ||w2_e||_F."""
+    w1 = np.asarray(moe_params["w1"], np.float32)
+    w2 = np.asarray(moe_params["w2"], np.float32)
+    n1 = np.sqrt((w1 ** 2).sum(axis=(1, 2)))
+    n2 = np.sqrt((w2 ** 2).sum(axis=(1, 2)))
+    return n1 * n2
+
+
+def _expert_scores_router_mc(moe_params: Dict, cfg: ModelConfig,
+                             n_samples: int = 4096, seed: int = 0) -> np.ndarray:
+    """Data-free Monte-Carlo: expected routed probability mass per expert
+    under synthetic N(0,1) inputs (router geometry only)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n_samples, cfg.d_model), jnp.float32)
+    logits = x @ jnp.asarray(moe_params["router"], jnp.float32)
+    if cfg.router_type == "sigmoid":
+        probs = jax.nn.sigmoid(logits)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    mass = jnp.zeros(cfg.num_experts).at[idx.reshape(-1)].add(w.reshape(-1))
+    return np.asarray(mass)
+
+
+SCORERS = {
+    "weight_norm": lambda p, cfg: _expert_scores_weight_norm(p),
+    "router_mc": _expert_scores_router_mc,
+}
+
+
+# --------------------------------------------------------------------------- #
+# Inter-expert pruning
+# --------------------------------------------------------------------------- #
+
+
+def inter_prune(params: Dict, cfg: ModelConfig, prune_frac: float,
+                method: str = "weight_norm") -> Tuple[Dict, ModelConfig]:
+    """Remove ``prune_frac`` of experts per layer.  Returns (params', cfg')."""
+    e = cfg.num_experts
+    n_drop = int(round(e * prune_frac))
+    n_keep = e - n_drop
+    if n_keep < cfg.moe_top_k:
+        raise ValueError(f"cannot keep {n_keep} experts with top-k={cfg.moe_top_k}")
+    scorer = SCORERS[method]
+
+    def prune_layer(moe_params: Dict) -> Dict:
+        scores = scorer(moe_params, cfg)
+        keep = np.sort(np.argsort(scores)[::-1][:n_keep])
+        out = dict(moe_params)
+        out["router"] = jnp.asarray(np.asarray(moe_params["router"])[:, keep])
+        out["w1"] = jnp.asarray(np.asarray(moe_params["w1"])[keep])
+        out["w2"] = jnp.asarray(np.asarray(moe_params["w2"])[keep])
+        return out
+
+    new_params = _map_moe_layers(params, cfg, prune_layer)
+    return new_params, cfg.with_(num_experts=n_keep)
+
+
+# --------------------------------------------------------------------------- #
+# Intra-expert pruning
+# --------------------------------------------------------------------------- #
+
+
+def intra_prune(params: Dict, cfg: ModelConfig,
+                prune_frac: float) -> Tuple[Dict, ModelConfig]:
+    """Shrink each expert's FFN inner dim by ``prune_frac`` (magnitude)."""
+    f = cfg.moe_d_ff
+    n_keep = f - int(round(f * prune_frac))
+    if n_keep < 1:
+        raise ValueError("cannot prune all FFN dims")
+
+    def prune_layer(moe_params: Dict) -> Dict:
+        w1 = np.asarray(moe_params["w1"], np.float32)     # [E, D, 2F]
+        w2 = np.asarray(moe_params["w2"], np.float32)     # [E, F, D]
+        e = w1.shape[0]
+        gate, up = w1[..., :f], w1[..., f:]
+        # per (expert, inner-dim) importance
+        s = (np.sqrt((gate ** 2).sum(1)) + np.sqrt((up ** 2).sum(1))) \
+            * np.sqrt((w2 ** 2).sum(2))                    # [E, F]
+        keep = np.sort(np.argsort(s, axis=1)[:, ::-1][:, :n_keep], axis=1)
+        ar = np.arange(e)[:, None]
+        new_w1 = np.concatenate([gate[ar, :, keep].transpose(0, 2, 1),
+                                 up[ar, :, keep].transpose(0, 2, 1)], axis=-1)
+        new_w2 = w2[ar, keep, :]
+        out = dict(moe_params)
+        dt = moe_params["w1"].dtype
+        out["w1"] = jnp.asarray(new_w1, dt)
+        out["w2"] = jnp.asarray(new_w2, dt)
+        return out
+
+    new_params = _map_moe_layers(params, cfg, prune_layer)
+    return new_params, cfg.with_(moe_d_ff=n_keep)
+
+
+# --------------------------------------------------------------------------- #
+# Tree surgery over grouped/stacked params
+# --------------------------------------------------------------------------- #
+
+
+def _map_moe_layers(params: Dict, cfg: ModelConfig, fn) -> Dict:
+    """Apply ``fn(per-layer moe params) -> new moe params`` across the stack."""
+    groups = group_pattern(cfg.pattern())
+    new_params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+    stack = new_params["stack"]
+    new_groups = list(stack["groups"])
+    for gi, g in enumerate(groups):
+        if g.spec.kind != "attn_moe":
+            continue
+        gp = dict(new_groups[gi])
+        moe_p = gp["moe"]
+        if g.count == 1:
+            gp["moe"] = fn(moe_p)
+        else:
+            layers = [fn(jax.tree.map(lambda x, i=i: x[i], moe_p))
+                      for i in range(g.count)]
+            gp["moe"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+        new_groups[gi] = gp
+    stack = dict(stack)
+    stack["groups"] = new_groups
+    new_params = dict(new_params)
+    new_params["stack"] = stack
+    return new_params

@@ -1,0 +1,164 @@
+"""LExI Stage 1: per-layer top-k perturbation profiling (paper Alg. 1).
+
+Faithful to the published algorithm:
+
+  * inputs are synthetic ``X ~ N(0,1)^{B x L x H}`` -- **no calibration data**;
+  * for each MoE layer *in isolation*, compute the baseline output with the
+    pretrained top-k, then the output for every candidate k in the search
+    space ``{1, ..., k_base}``;
+  * the perturbation is the Frobenius norm ``||Y_k - Y_base||_F``, averaged
+    over ``n_iter`` Monte-Carlo draws.
+
+Profiling runs the layer dropless (capacity factor = num_experts) so the
+result measures routing-width sensitivity, not capacity-overflow noise --
+the paper's reference implementation (HF eager MoE) has no capacity concept.
+
+The output ``SensitivityTable`` is all Stage 2 needs: search never loads the
+model (paper §4: "finds solutions fast without needing to load the actual
+model").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import group_pattern
+from repro.models.moe import moe_dense
+
+
+# --------------------------------------------------------------------------- #
+# Table artifact
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class SensitivityTable:
+    """D[layer][k-1] = mean Frobenius deviation of running layer at top-k."""
+
+    arch: str
+    k_base: int
+    moe_layer_indices: Tuple[int, ...]
+    target_topks: Tuple[int, ...]
+    n_iter: int
+    values: np.ndarray  # [n_moe_layers, len(target_topks)]
+
+    @property
+    def num_layers(self) -> int:
+        return self.values.shape[0]
+
+    def loss(self, layer: int, k: int) -> float:
+        return float(self.values[layer, self.target_topks.index(k)])
+
+    def normalized(self) -> np.ndarray:
+        """Per-layer max-normalized (for Fig. 3-style heatmaps)."""
+        mx = self.values.max(axis=1, keepdims=True)
+        return self.values / np.maximum(mx, 1e-12)
+
+    def save(self, path: str) -> None:
+        d = dataclasses.asdict(self)
+        d["values"] = self.values.tolist()
+        with open(path, "w") as f:
+            json.dump(d, f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "SensitivityTable":
+        with open(path) as f:
+            d = json.load(f)
+        d["values"] = np.asarray(d["values"], np.float64)
+        d["moe_layer_indices"] = tuple(d["moe_layer_indices"])
+        d["target_topks"] = tuple(d["target_topks"])
+        return cls(**d)
+
+
+# --------------------------------------------------------------------------- #
+# Extracting per-layer MoE params from the grouped/stacked param tree
+# --------------------------------------------------------------------------- #
+
+
+def iter_moe_layer_params(params: Dict, cfg: ModelConfig) -> Iterator[Tuple[int, Dict]]:
+    """Yields (layer_index, moe_params) for every MoE layer."""
+    groups = group_pattern(cfg.pattern())
+    stack = params["stack"] if "stack" in params else params
+    for gi, g in enumerate(groups):
+        if g.spec.kind != "attn_moe":
+            continue
+        gp = stack["groups"][gi]["moe"]
+        if g.count == 1:
+            yield g.start, gp
+        else:
+            for i in range(g.count):
+                yield g.start + i, jax.tree.map(lambda x, i=i: x[i], gp)
+
+
+# --------------------------------------------------------------------------- #
+# Alg. 1
+# --------------------------------------------------------------------------- #
+
+
+def _layer_deltas_fn(cfg: ModelConfig, target_topks: Sequence[int], batch: int,
+                     seq: int):
+    """jitted fn: (moe_params, key) -> deltas [len(target_topks)]."""
+    dropless = cfg.with_(moe_capacity_factor=float(cfg.num_experts))
+
+    def fn(moe_params, key):
+        x = jax.random.normal(key, (batch * seq, cfg.d_model), jnp.float32)
+        x = x.astype(jnp.dtype(cfg.dtype))
+        y_base, _ = moe_dense(moe_params, dropless, x, dropless.moe_top_k)
+        deltas = []
+        for k in target_topks:
+            y_k, _ = moe_dense(moe_params, dropless, x, int(k))
+            d = jnp.linalg.norm((y_k - y_base).astype(jnp.float32).reshape(-1))
+            deltas.append(d)
+        return jnp.stack(deltas)
+
+    return jax.jit(fn)
+
+
+def profile_sensitivity(
+    params: Dict,
+    cfg: ModelConfig,
+    *,
+    n_iter: int = 16,
+    batch: int = 4,
+    seq: int = 64,
+    target_topks: Optional[Sequence[int]] = None,
+    key=None,
+) -> SensitivityTable:
+    """Run Alg. 1 over every MoE layer of the model."""
+    if not cfg.is_moe:
+        raise ValueError(f"{cfg.name} has no MoE layers (LExI inapplicable)")
+    if cfg.moe_top_k < 2:
+        raise ValueError(
+            f"{cfg.name}: top-k={cfg.moe_top_k} leaves no search space below "
+            "baseline (paper §6 Limitations, e.g. Llama-4 top-1)")
+    if target_topks is None:
+        target_topks = tuple(range(1, cfg.moe_top_k + 1))
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    fn = _layer_deltas_fn(cfg, target_topks, batch, seq)
+    layer_ids: List[int] = []
+    rows: List[np.ndarray] = []
+    for layer_idx, moe_params in iter_moe_layer_params(params, cfg):
+        acc = np.zeros(len(target_topks), np.float64)
+        for it in range(n_iter):
+            k_it = jax.random.fold_in(key, layer_idx * 131071 + it)
+            acc += np.asarray(fn(moe_params, k_it), np.float64)
+        layer_ids.append(layer_idx)
+        rows.append(acc / n_iter)
+
+    return SensitivityTable(
+        arch=cfg.name,
+        k_base=cfg.moe_top_k,
+        moe_layer_indices=tuple(layer_ids),
+        target_topks=tuple(int(k) for k in target_topks),
+        n_iter=n_iter,
+        values=np.stack(rows),
+    )

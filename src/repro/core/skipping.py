@@ -1,0 +1,39 @@
+"""NAEE-style dynamic expert skipping baseline (Lu et al. 2024).
+
+Token-aware: during inference, the second-ranked expert is skipped for a
+token when its routing weight falls below ``tau * weight_of_top1``.  The
+paper (and our DESIGN.md §2) note this is (a) limited to top-k=2 regimes and
+(b) data-dependent -- the skip decision varies per token, so on TPU it cannot
+shrink static dispatch shapes; only the *quality* effect is real, plus an
+*expected* FLOP saving we report analytically.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def with_dynamic_skipping(cfg: ModelConfig, tau: float) -> ModelConfig:
+    """Enable skipping (routing-level; see models/moe.route)."""
+    if cfg.moe_top_k < 2:
+        raise ValueError("dynamic skipping needs top-k >= 2 (paper §1)")
+    return cfg.with_(dynamic_skip_tau=float(tau))
+
+
+def expected_skip_rate(params_moe: Dict, cfg: ModelConfig, tau: float,
+                       n_samples: int = 4096, seed: int = 0) -> float:
+    """Monte-Carlo estimate of the fraction of non-top1 slots skipped."""
+    from repro.models.moe import route
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n_samples, cfg.d_model),
+                          jnp.dtype(cfg.dtype))
+    w, _, _ = route(params_moe, cfg.with_(dynamic_skip_tau=0.0), x,
+                    cfg.moe_top_k)
+    thresh = tau * w[:, :1]
+    skipped = jnp.sum(w[:, 1:] < thresh)
+    return float(skipped) / float(w[:, 1:].size)

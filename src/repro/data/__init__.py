@@ -1,0 +1,2 @@
+from repro.data.pipeline import Pipeline  # noqa: F401
+from repro.data.synthetic import DataConfig, data_config_for, sample_batch, stream  # noqa: F401

@@ -1,0 +1,64 @@
+"""Prefetching, restart-deterministic input pipeline.
+
+A background thread keeps a small queue of ready host batches (numpy) so data
+generation overlaps the device step -- the CPU-side analogue of tf.data /
+grain prefetch.  ``start_step`` makes restarts exact: the pipeline replays
+from the step recorded in the checkpoint.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.data.synthetic import DataConfig, sample_batch
+
+
+class Pipeline:
+    def __init__(self, dc: DataConfig, *, start_step: int = 0,
+                 prefetch: int = 2):
+        self.dc = dc
+        self.step = start_step
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(prefetch, 1))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        step = self.step
+        while not self._stop.is_set():
+            batch = sample_batch(self.dc, step)
+            batch["_step"] = step
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        batch = self._q.get()
+        self.step = batch.pop("_step") + 1
+        return batch
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+moe_ffn          grouped per-expert SwiGLU FFN (the FusedMoE analogue)
+flash_attention  online-softmax causal/windowed attention for prefill
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper),
+ref.py (pure-jnp oracle).  Validated with interpret=True on CPU.
+"""

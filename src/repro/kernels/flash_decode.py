@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: flash-decode -- one-token attention over a long KV cache.
+
+The decode-side hot spot identified in EXPERIMENTS.md §Perf cell B: after the
+context-parallel resharding, the remaining memory term is the f32 score
+traffic of reading a 32k-entry cache per step.  This kernel streams the cache
+through VMEM in bk-sized tiles with an online-softmax accumulator, reading
+K/V once in their storage dtype (bf16) -- the kernel-level version of the
+``attn_compute_dtype="bf16_accum32"`` lever.
+
+Semantics match the model's position-based masking exactly: a slot
+participates iff ``0 <= pos[slot] <= cur_pos`` (and within the sliding
+window, if any), so ring buffers / padding need no special cases and the
+kernel drops into either the replicated or the sequence-sharded decode path
+(per shard-local cache slice).
+
+Grid: ``(B, Hkv, S/bk)`` -- the kv dimension iterates sequentially on TPU and
+accumulates (m, l, acc) for the g=Hq/Hkv query heads of this kv head in VMEM
+scratch; the output tile is written once at the last kv step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, window):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # [g, hd]
+    k = k_ref[0, :, 0, :]                             # [bk, hd] storage dtype
+    v = v_ref[0, :, 0, :]
+    pos = pos_ref[0]                                  # [bk] i32
+    cur = cur_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())))  # [g, bk]
+    valid = (pos >= 0) & (pos <= cur)
+    if window is not None:
+        valid &= pos > cur - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_old - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot(p.astype(jnp.float32),
+                                  v.astype(jnp.float32)))
+    m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q, k, v, pos, cur_pos, *, window=None,
+                        block_k: int = 512, interpret: bool = False):
+    """q [B,Hq,hd]; k/v [B,S,Hkv,hd]; pos [B,S] i32; cur_pos [B] i32.
+
+    Returns [B, Hq, hd].  Slots with pos<0 or pos>cur_pos are masked.
+    """
+    b, hq, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bk = min(block_k, s)
+    while s % bk:
+        bk //= 2
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(b, hkv, g, hd)
+    cur2 = cur_pos.reshape(b, 1).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window),
+        grid=(b, hkv, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, j_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, h_, j_: (b_, j_, h_, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, h_, j_: (b_, j_, h_, 0)),
+            pl.BlockSpec((1, bk), lambda b_, h_, j_: (b_, j_)),
+            pl.BlockSpec((1, 1), lambda b_, h_, j_: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h_, j_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, pos, cur2)
+    return out.reshape(b, hq, hd)

@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` -- the
+kernel body runs in Python on CPU for correctness validation; on TPU the same
+code lowers to Mosaic.  Model code calls these wrappers, never pallas_call
+directly.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.moe_ffn import moe_ffn_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_f"))
+def moe_ffn(xe, w1, w2, *, block_c: int = 128, block_f: int = 256):
+    """Grouped expert SwiGLU FFN: xe [E,C,D], w1 [E,D,2F], w2 [E,F,D]."""
+    return moe_ffn_pallas(xe, w1, w2, block_c=block_c, block_f=block_f,
+                          interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("window", "block_q", "block_k"))
+def flash_attention_bhsd(q, k, v, *, window=None, block_q: int = 512,
+                         block_k: int = 512):
+    """Causal flash attention in [B, H, S, hd] layout."""
+    return flash_attention_pallas(q, k, v, window=window, block_q=block_q,
+                                  block_k=block_k, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("window", "block_k"))
+def flash_decode(q, k, v, pos, cur_pos, *, window=None, block_k: int = 512):
+    """One-token decode attention over a position-masked KV cache."""
+    from repro.kernels.flash_decode import flash_decode_pallas
+    return flash_decode_pallas(q, k, v, pos, cur_pos, window=window,
+                               block_k=block_k, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, window=None):
+    """Model-layout adapter: q [B,S,Hq,hd], k/v [B,S,Hkv,hd] -> [B,S,Hq,hd]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, window=window)
+    return out.transpose(0, 2, 1, 3)

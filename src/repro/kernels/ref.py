@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(xe, w1, w2):
+    """xe [E, C, D], w1 [E, D, 2F], w2 [E, F, D] -> [E, C, D] (SwiGLU)."""
+    h = jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                   w1.astype(jnp.float32))
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("ecf,efd->ecd", h, w2.astype(jnp.float32))
+    return out.astype(xe.dtype)
+
+
+def flash_decode_ref(q, k, v, pos, cur_pos, *, window=None):
+    """One-token decode attention over a position-masked cache.
+
+    q [B,Hq,hd]; k/v [B,S,Hkv,hd]; pos [B,S]; cur_pos [B] -> [B,Hq,hd].
+    """
+    b, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)      # q head h -> kv head h // g
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    valid = (pos >= 0) & (pos <= cur_pos[:, None])
+    if window is not None:
+        valid &= pos > (cur_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, hd).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, window=None):
+    """Exact causal (optionally windowed) attention.
+
+    q [B, Hq, Sq, hd], k/v [B, Hkv, Sk, hd] -> [B, Hq, Sq, hd].
+    Query position i is aligned to key position i (Sq == Sk expected).
+    """
+    b, hq, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

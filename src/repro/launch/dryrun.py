@@ -1,0 +1,394 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a module entry point:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+
+The first two lines below set the placeholder device count BEFORE any jax
+import (jax locks the device count at first init).  Tests/benches import
+other modules and keep seeing 1 device.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# (CI-scale override knob; still before any jax import)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import gc            # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import models                          # noqa: E402
+from repro.analysis import roofline as rl         # noqa: E402
+from repro.configs import ASSIGNED, get_config    # noqa: E402
+from repro.configs.base import ModelConfig        # noqa: E402
+from repro.configs.shapes import SHAPES, SHAPE_BY_NAME, ShapeSpec, applicability  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.opts import ModelOpts           # noqa: E402
+from repro.optim import AdamW                     # noqa: E402
+from repro.sharding import rules                  # noqa: E402
+
+
+# --------------------------------------------------------------------------- #
+# Cell configuration
+# --------------------------------------------------------------------------- #
+
+
+def cell_config(cfg: ModelConfig, shape: ShapeSpec,
+                lexi_budget_frac: Optional[float] = None) -> ModelConfig:
+    """Arch config adjusted for one cell (production MoE impls, etc.)."""
+    kw: Dict = {}
+    if cfg.is_moe:
+        kw["moe_impl"] = "ep_psum" if shape.step == "decode" else "ep_a2a"
+    if cfg.name == "zamba2-1.2b" and shape.name == "long_500k":
+        # cap the shared attention block's window (DESIGN.md §Shape-applicability)
+        kw["sliding_window"] = 4096
+    cfg = cfg.with_(**kw) if kw else cfg
+    if lexi_budget_frac is not None and cfg.is_moe and cfg.moe_top_k > 1:
+        n = cfg.num_moe_layers
+        budget = max(n, int(round(lexi_budget_frac * n * cfg.moe_top_k)))
+        # deterministic synthetic plan with the right budget (the dry-run
+        # cares about shapes; real plans come from repro.core.optimize)
+        base, extra = divmod(budget, n)
+        plan = tuple(min(cfg.moe_top_k, base + (1 if i < extra else 0))
+                     for i in range(n))
+        cfg = cfg.with_lexi_plan(plan)
+    return cfg
+
+
+def cell_opts(cfg: ModelConfig, shape: ShapeSpec, *,
+              remat: str = "full", a2a_chunks: int = 1,
+              use_flash: bool = False, mla_absorb: bool = True,
+              scan_unroll: bool = False, act_constraint: bool = False,
+              attn_compute_dtype: str = "f32",
+              decode_kv_seq_shard: bool = False,
+              fsdp_params: bool = False,
+              microbatches: int = 1,
+              remat_chunk: int = 0) -> ModelOpts:
+    return ModelOpts(remat=remat if shape.step == "train" else "none",
+                     a2a_chunks=a2a_chunks, use_flash=use_flash,
+                     mla_absorb=mla_absorb, scan_unroll=scan_unroll,
+                     act_constraint=act_constraint,
+                     attn_compute_dtype=attn_compute_dtype,
+                     decode_kv_seq_shard=decode_kv_seq_shard,
+                     fsdp_params=fsdp_params,
+                     microbatches=microbatches,
+                     remat_chunk=remat_chunk)
+
+
+# --------------------------------------------------------------------------- #
+# Abstract inputs per cell ("input_specs")
+# --------------------------------------------------------------------------- #
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.step in ("train", "prefill"):
+        s_tok = s
+        extras: Dict = {}
+        if cfg.is_encoder_decoder:
+            extras["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        elif cfg.prefix_embed_len:
+            s_tok = s - cfg.prefix_embed_len
+            extras["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_embed_len, cfg.d_model), jnp.float32)
+        batch = {"tokens": _tok(b, s_tok), **extras}
+        if shape.step == "train":
+            batch["targets"] = _tok(b, s_tok)
+            batch["mask"] = _tok(b, s_tok)
+        return {"batch": batch}
+    # decode: one new token against a cache of length seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "caches": models.abstract_caches(cfg, b, s),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Step builders
+# --------------------------------------------------------------------------- #
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, opts: ModelOpts):
+    """Returns (fn, abstract_args tuple, in_shardings, out_shardings)."""
+    params_abs = models.abstract_params(cfg)
+    p_specs = rules.param_specs(params_abs, cfg, mesh, fsdp=opts.fsdp_params)
+    p_sh = rules.named(mesh, p_specs)
+    spec = input_specs(cfg, shape)
+
+    if shape.step == "train":
+        optimizer = AdamW(total_steps=10_000)
+        opt_abs = jax.eval_shape(optimizer.init, params_abs)
+        o_specs = rules.opt_state_specs(opt_abs, p_specs, mesh)
+        o_sh = rules.named(mesh, o_specs)
+        b_sh = rules.named(mesh, rules.batch_specs(spec["batch"], mesh))
+
+        micro = max(int(opts.microbatches), 1)
+
+        def train_step(params, opt_state, batch):
+            if micro <= 1:
+                def lf(p):
+                    return models.loss_fn(p, cfg, batch, mesh=mesh, opts=opts)
+                (loss, metrics), grads = jax.value_and_grad(
+                    lf, has_aux=True)(params)
+            else:
+                # gradient accumulation: sequential scan over microbatches
+                mb = jax.tree.map(
+                    lambda x: x.reshape(micro, x.shape[0] // micro,
+                                        *x.shape[1:]), batch)
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def body(carry, one):
+                    acc_l, acc_g = carry
+                    (l, _), g = jax.value_and_grad(
+                        lambda p: models.loss_fn(p, cfg, one, mesh=mesh,
+                                                 opts=opts),
+                        has_aux=True)(params)
+                    acc_g = jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), acc_g, g)
+                    return (acc_l + l, acc_g), None
+
+                (lsum, gsum), _ = jax.lax.scan(
+                    body, (jnp.zeros(()), zero), mb,
+                    unroll=True if opts.scan_unroll else 1)
+                loss = lsum / micro
+                metrics = {"xent": loss, "aux": jnp.zeros(())}
+                grads = jax.tree.map(lambda g: g / micro, gsum)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = optimizer.apply_updates(params, updates)
+            return params, opt_state, (loss, metrics)
+
+        rep = rules.named(mesh, jax.tree.map(
+            lambda _: jax.sharding.PartitionSpec(),
+            jax.eval_shape(lambda: (jnp.zeros(()), {"xent": jnp.zeros(()),
+                                                    "aux": jnp.zeros(())}))))
+        return (train_step,
+                (params_abs, opt_abs, spec["batch"]),
+                (p_sh, o_sh, b_sh),
+                (p_sh, o_sh, rep),
+                (0, 1))
+
+    if shape.step == "prefill":
+        caches_abs = models.abstract_caches(cfg, shape.global_batch, shape.seq_len)
+        c_sh = rules.named(mesh, rules.cache_specs(caches_abs, cfg, mesh))
+        b_sh = rules.named(mesh, rules.batch_specs(spec["batch"], mesh))
+        logits_sh = rules.named(mesh, jax.sharding.PartitionSpec())
+
+        def prefill_step(params, batch, caches):
+            logits, caches = models.prefill_fn(params, cfg, batch, caches,
+                                               mesh=mesh, opts=opts)
+            return logits, caches
+
+        return (prefill_step,
+                (params_abs, spec["batch"], caches_abs),
+                (p_sh, b_sh, c_sh),
+                (logits_sh, c_sh),
+                (2,))
+
+    # decode
+    caches_abs = spec["caches"]
+    c_sh = rules.named(mesh, rules.cache_specs(
+        caches_abs, cfg, mesh, seq_shard=opts.decode_kv_seq_shard))
+    t_sh = rules.named(mesh, rules.batch_spec((shape.global_batch,), mesh))
+    logits_sh = rules.named(mesh, jax.sharding.PartitionSpec())
+
+    def serve_step(params, tokens, pos, caches):
+        logits, caches = models.decode_fn(params, cfg, tokens, pos, caches,
+                                          mesh=mesh, opts=opts)
+        return logits, caches
+
+    return (serve_step,
+            (params_abs, spec["tokens"], spec["pos"], caches_abs),
+            (p_sh, t_sh, t_sh, c_sh),
+            (logits_sh, c_sh),
+            (3,))
+
+
+# --------------------------------------------------------------------------- #
+# One cell: lower -> compile -> analyze
+# --------------------------------------------------------------------------- #
+
+
+def _compile_once(cfg, shape, mesh, opts):
+    fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh, opts)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        return lowered.compile()
+
+
+def composed_costs(cfg: ModelConfig, shape: ShapeSpec, mesh, opts: ModelOpts):
+    """Scan-exact per-device costs (see analysis/roofline.py).
+
+    XLA's HloCostAnalysis counts while-loop (lax.scan) bodies ONCE, so the
+    full module undercounts layer groups and the SSD chunk scan.  We compile
+    a 0-layer skeleton plus one unrolled 1-layer module per distinct
+    BlockSpec and compose:  total = F0 + sum_g count_g * (F_g - F0).
+    Encoder-decoder archs use Python-level layer loops (already exact).
+    """
+    if cfg.is_encoder_decoder:
+        return None  # full module is already scan-free
+    from collections import Counter
+    counts = Counter(cfg.pattern())
+    v_opts = dataclasses.replace(opts, scan_unroll=True)
+
+    skeleton = cfg.with_(block_pattern=(), lexi_plan=None, num_layers=0)
+    c0 = rl.costs_from_compiled(_compile_once(skeleton, shape, mesh, opts))
+
+    total = c0
+    for spec, count in counts.items():
+        v_cfg = cfg.with_(block_pattern=(spec,), lexi_plan=None, num_layers=1,
+                          ssm_scan_unroll=True)
+        cv = rl.costs_from_compiled(_compile_once(v_cfg, shape, mesh, v_opts))
+        total = total.scaled_add(cv - c0, count)
+    return total
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             lexi_budget_frac: Optional[float] = None,
+             opts_kw: Optional[Dict] = None, out_dir: Optional[str] = None,
+             verbose: bool = True, compose: bool = True,
+             cfg_overrides: Optional[Dict] = None,
+             tag: Optional[str] = None) -> Dict:
+    shape = SHAPE_BY_NAME[shape_name]
+    base_cfg = get_config(arch)
+    skip = applicability(base_cfg, shape)
+    mesh_desc = "2x16x16" if multi_pod else "16x16"
+    record: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_desc}
+    if tag:
+        record["tag"] = tag
+
+    if skip is not None:
+        record.update(status="SKIP", reason=skip)
+        _emit(record, out_dir, verbose)
+        return record
+
+    cfg = cell_config(base_cfg, shape, lexi_budget_frac)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    opts = cell_opts(cfg, shape, **(opts_kw or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        # 1) the real (scanned) module: proof-of-compile + memory analysis
+        compiled = _compile_once(cfg, shape, mesh, opts)
+        t_compile = time.time() - t0
+        mem = rl.device_memory(compiled)
+        try:
+            record["memory_analysis"] = str(compiled.memory_analysis())
+        except Exception as e:  # CPU backend may not implement it
+            record["memory_analysis"] = f"unavailable: {e}"
+        raw_costs = rl.costs_from_compiled(compiled)
+        del compiled
+
+        # 2) scan-exact cost composition from per-group variants
+        note = "costs from full module (scan-free)"
+        costs = None
+        if compose:
+            costs = composed_costs(cfg, shape, mesh, opts)
+            if costs is not None:
+                note = "costs composed from per-group unrolled variants"
+        if costs is None:
+            costs = raw_costs
+
+        report = rl.analyze_costs(costs, cfg, shape, chips=mesh.devices.size,
+                                  mesh_desc=mesh_desc, bytes_per_device=mem,
+                                  note=note)
+        record.update(status="OK", compile_s=round(t_compile, 1),
+                      total_s=round(time.time() - t0, 1),
+                      roofline=report.to_json(),
+                      raw_module_flops=raw_costs.flops,
+                      raw_module_bytes=raw_costs.nbytes,
+                      raw_module_coll_bytes=raw_costs.coll_total)
+    except Exception as e:
+        record.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    gc.collect()
+    _emit(record, out_dir, verbose)
+    return record
+
+
+def _emit(record: Dict, out_dir: Optional[str], verbose: bool) -> None:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"__{record['tag']}" if record.get("tag") else ""
+        name = f"{record['arch']}__{record['shape']}__{record['mesh']}{tag}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(record, f, indent=1)
+    if verbose:
+        if record["status"] == "OK":
+            r = record["roofline"]
+            print(f"[OK]   {record['arch']:24s} {record['shape']:12s} "
+                  f"{record['mesh']:8s} dominant={r['dominant']:10s} "
+                  f"t=({r['t_compute']:.3e},{r['t_memory']:.3e},"
+                  f"{r['t_collective']:.3e})s "
+                  f"useful={r['useful_flops_ratio']:.2f} "
+                  f"compile={record['compile_s']}s", flush=True)
+        elif record["status"] == "SKIP":
+            print(f"[SKIP] {record['arch']:24s} {record['shape']:12s} "
+                  f"{record['mesh']:8s} {record['reason'][:70]}", flush=True)
+        else:
+            print(f"[FAIL] {record['arch']:24s} {record['shape']:12s} "
+                  f"{record['mesh']:8s} {record['error'][:120]}", flush=True)
+
+
+# --------------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------------- #
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--all", action="store_true", help="all 40 cells")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--lexi-budget-frac", type=float, default=None,
+                    help="apply a synthetic LExI plan at this budget fraction")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--a2a-chunks", type=int, default=1)
+    ap.add_argument("--flash", action="store_true")
+    ap.add_argument("--no-mla-absorb", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output dir")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    opts_kw = dict(remat=args.remat, a2a_chunks=args.a2a_chunks,
+                   use_flash=args.flash, mla_absorb=not args.no_mla_absorb)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               lexi_budget_frac=args.lexi_budget_frac,
+                               opts_kw=opts_kw, out_dir=args.out)
+                n_fail += rec["status"] == "FAIL"
+    print(f"\ndone; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,11 @@
+from repro.models.model import (  # noqa: F401
+    abstract_caches,
+    abstract_params,
+    decode_fn,
+    init_caches,
+    init_params,
+    loss_fn,
+    make_train_batch,
+    prefill_fn,
+)
+from repro.models.opts import DEFAULT_OPTS, ModelOpts  # noqa: F401

@@ -1,0 +1,496 @@
+"""Attention layers: GQA (w/ qk-norm, sliding window) and MLA, with KV caches.
+
+Cache convention (per layer)
+----------------------------
+GQA: ``{"k": [B, S_buf, Hkv, hd], "v": [B, S_buf, Hkv, hd], "pos": [B, S_buf]}``
+MLA: ``{"ckv": [B, S_buf, r_kv], "krope": [B, S_buf, dr], "pos": [B, S_buf]}``
+
+``pos`` stores the absolute position held in each slot (-1 = empty).  For
+sliding-window attention the buffer is a ring of size ``min(max_len, window)``
+-- slot = position % S_buf -- which is what makes the 500k-token decode cell
+O(window) instead of O(seq).  Masks are always derived from ``pos``, so ring
+wrap-around needs no special cases.
+
+MLA decode implements both the straightforward ("materialized") path and the
+weight-absorbed path (fold W_kv_b into the query / output projections) so
+decode FLOPs scale with the latent rank instead of H*(dn+dv).  The two are
+numerically equivalent (tested) -- absorption is the production default.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    activation_dtype,
+    apply_rope,
+    dense_init,
+    param_dtype,
+    rms_norm_headwise,
+    split_keys,
+)
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+
+
+def init_attention(key, cfg: ModelConfig) -> Dict:
+    dt = param_dtype(cfg)
+    d = cfg.d_model
+    if cfg.attention == "mla":
+        ks = split_keys(key, 6)
+        hd_q = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        p: Dict = {}
+        if cfg.q_lora_rank:
+            p["wq_a"] = dense_init(ks[0], (d, cfg.q_lora_rank), dt)
+            p["q_norm"] = {"scale": jnp.ones((cfg.q_lora_rank,), dt)}
+            p["wq_b"] = dense_init(ks[1], (cfg.q_lora_rank, cfg.num_heads * hd_q), dt,
+                                   in_axis_size=cfg.q_lora_rank)
+        else:
+            p["wq"] = dense_init(ks[0], (d, cfg.num_heads * hd_q), dt)
+        p["wkv_a"] = dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim), dt)
+        p["kv_norm"] = {"scale": jnp.ones((cfg.kv_lora_rank,), dt)}
+        p["wkv_b"] = dense_init(
+            ks[3],
+            (cfg.kv_lora_rank, cfg.num_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+            dt, in_axis_size=cfg.kv_lora_rank)
+        p["wo"] = dense_init(ks[4], (cfg.num_heads * cfg.v_head_dim, d), dt,
+                             in_axis_size=cfg.num_heads * cfg.v_head_dim)
+        return p
+
+    hd = cfg.head_dim_
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.num_heads * hd), dt),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads * hd), dt),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads * hd), dt),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, d), dt,
+                         in_axis_size=cfg.num_heads * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dt)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dt)}
+    return p
+
+
+def init_cross_attention(key, cfg: ModelConfig) -> Dict:
+    """Encoder-decoder cross attention (whisper)."""
+    return init_attention(key, cfg)
+
+
+# --------------------------------------------------------------------------- #
+# Cache
+# --------------------------------------------------------------------------- #
+
+
+def cache_buf_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Abstract/concrete single-layer cache (used via eval_shape in dry-run)."""
+    dt = activation_dtype(cfg)
+    s = cache_buf_len(cfg, max_len)
+    if cfg.attention == "mla":
+        return {
+            "ckv": jnp.zeros((batch, s, cfg.kv_lora_rank), dt),
+            "krope": jnp.zeros((batch, s, cfg.qk_rope_head_dim), dt),
+            "pos": jnp.full((batch, s), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim_), dt),
+        "v": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim_), dt),
+        "pos": jnp.full((batch, s), -1, jnp.int32),
+    }
+
+
+def _write_seq(buf, values, positions):
+    """Scatter a [B, S, ...] sequence into a ring buffer at positions % S_buf.
+
+    Keeps only the last S_buf tokens when S > S_buf (ring semantics).
+    """
+    s_buf = buf.shape[1]
+    s = values.shape[1]
+    if s > s_buf:
+        values = values[:, -s_buf:]
+        positions = positions[:, -s_buf:]
+    slots = positions % s_buf                           # [B, S]
+    bidx = jnp.arange(buf.shape[0])[:, None]
+    return buf.at[bidx, slots].set(values.astype(buf.dtype))
+
+
+def _write_step(buf, value, position):
+    """Scatter one token per sample: value [B, ...], position [B]."""
+    s_buf = buf.shape[1]
+    slots = position % s_buf                            # [B]
+    bidx = jnp.arange(buf.shape[0])
+    return buf.at[bidx, slots].set(value.astype(buf.dtype))
+
+
+# --------------------------------------------------------------------------- #
+# Masking + core attention math
+# --------------------------------------------------------------------------- #
+
+
+def _mask_bias(q_pos, kv_pos, window: Optional[int], causal: bool):
+    """Additive bias [B, 1, Sq, Sk] from absolute positions."""
+    q = q_pos[:, None, :, None].astype(jnp.int32)       # [B,1,Sq,1]
+    k = kv_pos[:, None, None, :].astype(jnp.int32)      # [B,1,1,Sk]
+    valid = k >= 0
+    if causal:
+        valid &= k <= q
+    if window is not None:
+        valid &= k > q - window
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, scale: float, compute_dtype: str = "f32"):
+    """Grouped-query attention: q [B,Sq,Hq,d], k/v [B,Sk,Hkv,d(v)].
+
+    ``compute_dtype="bf16_accum32"`` keeps K/V operands in their storage
+    dtype with f32 accumulation (preferred_element_type) -- on TPU this is
+    MXU-native and halves the HBM bytes of reading a bf16 KV cache (§Perf).
+    """
+    b, sq, hq, dq = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    # standard GQA head mapping: q head h uses kv head h // g (kv-major)
+    qg = q.reshape(b, sq, hkv, g, dq)
+    if compute_dtype == "bf16_accum32":
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = scores + bias[:, None]
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    else:
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        scores = scores + bias[:, None]                 # [B,Hkv,g,Sq,Sk]
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Sequence-sharded decode attention (context parallelism for the KV cache)
+# --------------------------------------------------------------------------- #
+
+
+def _decode_attend_seqshard(cfg: ModelConfig, q, k_new, v_new, pos_b, cache,
+                            mesh, compute_dtype: str = "f32"):
+    """Decode attention with the KV cache sharded over the *sequence* dim of
+    the ``model`` axis (flash-decoding-style context parallelism).
+
+    Each model shard holds S_buf/m positions, appends the new token iff its
+    ring slot lands in-range, computes partial (max, sumexp, weighted-V), and
+    the shards combine with a log-sum-exp reduction:
+
+        m* = pmax(m);  l* = psum(l * e^{m-m*});  o = psum(o_p * e^{m-m*}) / l*
+
+    This is what makes 32k-context decode *fit*: without it the cache
+    replicates over the model axis whenever kv_heads % model != 0
+    (EXPERIMENTS.md §Perf, cell B).  Masking needs no special cases because
+    it is derived from the stored absolute positions.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import batch_spec, data_axes, data_axes_size
+
+    axes = tuple(mesh.axis_names)
+    msize = mesh.shape["model"]
+    daxes = data_axes(mesh)
+    b = q.shape[0]
+    bdim = (daxes if len(daxes) > 1 else daxes[0]) \
+        if b % max(data_axes_size(mesh), 1) == 0 else None
+    hd = cfg.head_dim_
+    scale = 1.0 / (hd ** 0.5)
+    window = cfg.sliding_window
+
+    def body(q_l, kn, vn, pb, k_l, v_l, pos_l):
+        s_loc = k_l.shape[1]
+        midx = jax.lax.axis_index("model")
+        s_buf = s_loc * msize
+        slot = pb % s_buf                                  # [B]
+        loc = slot - midx * s_loc
+        ok = (loc >= 0) & (loc < s_loc)
+        locc = jnp.clip(loc, 0, s_loc - 1)
+        bidx = jnp.arange(k_l.shape[0])
+        k_l = k_l.at[bidx, locc].set(
+            jnp.where(ok[:, None, None], kn.astype(k_l.dtype), k_l[bidx, locc]))
+        v_l = v_l.at[bidx, locc].set(
+            jnp.where(ok[:, None, None], vn.astype(v_l.dtype), v_l[bidx, locc]))
+        pos_l = pos_l.at[bidx, locc].set(jnp.where(ok, pb, pos_l[bidx, locc]))
+
+        bias = _mask_bias(pb[:, None], pos_l, window, True)   # [B,1,1,S_loc]
+        bl, _, hq, dq = q_l.shape
+        hkv = k_l.shape[2]
+        g = hq // hkv
+        qg = q_l.reshape(bl, 1, hkv, g, dq)    # q head h -> kv head h // g
+        if compute_dtype == "bf16_accum32":
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_l,
+                           preferred_element_type=jnp.float32) * scale
+        else:
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                           k_l.astype(jnp.float32)) * scale
+        s = s + bias[:, None]                              # [B,hkv,g,1,S_loc]
+        m = jnp.max(s, axis=-1, keepdims=True)             # local max
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        if compute_dtype == "bf16_accum32":
+            o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_l.dtype), v_l,
+                           preferred_element_type=jnp.float32)
+        else:
+            o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_l.astype(jnp.float32))
+
+        m_g = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)                            # [B,hkv,g,1,1]
+        l_g = jax.lax.psum(l * corr, "model")
+        o_g = jax.lax.psum(o * corr, "model")              # [B,hkv,g,1,d]
+        out = o_g / jnp.maximum(l_g, 1e-30)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(bl, 1, hq, v_l.shape[-1])
+        return out.astype(q_l.dtype), k_l, v_l, pos_l
+
+    qspec = P(bdim, None, None, None)
+    cspec = P(bdim, "model", None, None)
+    pspec = P(bdim, "model")
+    bspec3 = P(bdim, None, None)
+    bspec1 = P(bdim)
+    out, k2, v2, p2 = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, bspec3, bspec3, bspec1, cspec, cspec, pspec),
+        out_specs=(qspec, cspec, cspec, pspec),
+    )(q, k_new, v_new, pos_b, cache["k"], cache["v"], cache["pos"])
+    return out, {"k": k2, "v": v2, "pos": p2}
+
+
+# --------------------------------------------------------------------------- #
+# GQA forward
+# --------------------------------------------------------------------------- #
+
+
+def gqa_attention(
+    params: Dict,
+    cfg: ModelConfig,
+    x,
+    positions,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict] = None,
+    causal: bool = True,
+    kv_override: Optional[Tuple] = None,
+    use_flash: bool = False,
+    rope: bool = True,
+    compute_dtype: str = "f32",
+    seq_shard_mesh=None,
+    use_flash_decode: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x [B,S,D]; positions [B,S] (train/prefill) or [B] (decode).
+
+    Returns (output [B,S,D], updated cache or None).
+    ``kv_override = (k, v, kv_positions)`` implements cross-attention
+    (which is rope-free: pass ``rope=False``).
+    """
+    if kv_override is not None:
+        rope = False
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = (x @ params["wq"]).reshape(b, s, cfg.num_heads, hd)
+
+    if kv_override is None:
+        k = (x @ params["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+        v = (x @ params["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    else:
+        k, v, kv_positions = kv_override
+
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q, params["q_norm"]["scale"])
+        if kv_override is None:
+            k = rms_norm_headwise(k, params["k_norm"]["scale"])
+
+    if mode == "decode":
+        pos_b = positions  # [B]
+        if rope:
+            q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
+        if kv_override is None and seq_shard_mesh is not None:
+            # context-parallel decode: KV cache seq-sharded over `model`
+            if rope:
+                k = apply_rope(k, pos_b[:, None], cfg.rope_theta)
+            out, new_cache = _decode_attend_seqshard(
+                cfg, q, k[:, 0], v[:, 0], pos_b, cache, seq_shard_mesh,
+                compute_dtype)
+            out = out.reshape(b, s, cfg.num_heads * hd) @ params["wo"]
+            return out, new_cache
+        if kv_override is None:
+            if rope:
+                k = apply_rope(k, pos_b[:, None], cfg.rope_theta)
+            cache = dict(cache)
+            cache["k"] = _write_step(cache["k"], k[:, 0], pos_b)
+            cache["v"] = _write_step(cache["v"], v[:, 0], pos_b)
+            cache["pos"] = _write_step(cache["pos"], pos_b, pos_b)
+            k_all, v_all, kv_pos = cache["k"], cache["v"], cache["pos"]
+        else:
+            k_all, v_all, kv_pos = k, v, kv_positions
+        if use_flash_decode and kv_override is None:
+            from repro.kernels import ops as kops
+            out = kops.flash_decode(q[:, 0], k_all, v_all, kv_pos, pos_b,
+                                    window=cfg.sliding_window)[:, None]
+        else:
+            bias = _mask_bias(pos_b[:, None], kv_pos, cfg.sliding_window,
+                              causal)
+            out = _sdpa(q, k_all, v_all, bias, 1.0 / (hd ** 0.5),
+                        compute_dtype)
+        new_cache = cache
+    else:
+        if rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+        if kv_override is None:
+            if rope:
+                k = apply_rope(k, positions, cfg.rope_theta)
+            kv_pos = positions
+        else:
+            kv_pos = kv_positions
+        if use_flash and kv_override is None and causal:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, window=cfg.sliding_window)
+        else:
+            bias = _mask_bias(positions, kv_pos, cfg.sliding_window, causal)
+            out = _sdpa(q, k, v, bias, 1.0 / (hd ** 0.5), compute_dtype)
+        new_cache = None
+        if mode == "prefill" and kv_override is None:
+            cache = dict(cache)
+            cache["k"] = _write_seq(cache["k"], k, positions)
+            cache["v"] = _write_seq(cache["v"], v, positions)
+            cache["pos"] = _write_seq(cache["pos"], positions, positions)
+            new_cache = cache
+
+    out = out.reshape(b, s, cfg.num_heads * hd) @ params["wo"]
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# MLA forward
+# --------------------------------------------------------------------------- #
+
+
+def _mla_q(params, cfg: ModelConfig, x):
+    from repro.models.common import apply_norm
+    b, s, _ = x.shape
+    hd_q = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = x @ params["wq_a"]
+        cq = apply_norm(params["q_norm"], cfg.with_(norm_type="rmsnorm"), cq)
+        q = (cq @ params["wq_b"]).reshape(b, s, cfg.num_heads, hd_q)
+    else:
+        q = (x @ params["wq"]).reshape(b, s, cfg.num_heads, hd_q)
+    return jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)   # q_nope, q_rope
+
+
+def _mla_latents(params, cfg: ModelConfig, x, positions):
+    from repro.models.common import apply_norm
+    kv_a = x @ params["wkv_a"]
+    ckv, krope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    ckv = apply_norm(params["kv_norm"], cfg.with_(norm_type="rmsnorm"), ckv)
+    krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, krope
+
+
+def _wkv_b_split(params, cfg: ModelConfig):
+    wkv_b = params["wkv_b"].reshape(
+        cfg.kv_lora_rank, cfg.num_heads, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    return (wkv_b[..., : cfg.qk_nope_head_dim],      # [r, H, dn]
+            wkv_b[..., cfg.qk_nope_head_dim:])       # [r, H, dv]
+
+
+def mla_attention(
+    params: Dict,
+    cfg: ModelConfig,
+    x,
+    positions,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict] = None,
+    absorb: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style)."""
+    b, s, _ = x.shape
+    scale = 1.0 / ((cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** 0.5)
+
+    if mode == "decode":
+        pos_b = positions                              # [B]
+        q_nope, q_rope = _mla_q(params, cfg, x)        # [B,1,H,dn],[B,1,H,dr]
+        q_rope = apply_rope(q_rope, pos_b[:, None], cfg.rope_theta)
+        ckv_t, krope_t = _mla_latents(params, cfg, x, pos_b[:, None])
+        cache = dict(cache)
+        cache["ckv"] = _write_step(cache["ckv"], ckv_t[:, 0], pos_b)
+        cache["krope"] = _write_step(cache["krope"], krope_t[:, 0], pos_b)
+        cache["pos"] = _write_step(cache["pos"], pos_b, pos_b)
+        ckv, krope, kv_pos = cache["ckv"], cache["krope"], cache["pos"]
+        bias = _mask_bias(pos_b[:, None], kv_pos, None, True)  # [B,1,1,Sk]
+
+        wk_b, wv_b = _wkv_b_split(params, cfg)
+        if absorb:
+            # fold W_kv_b(k) into q:    q_lat [B,1,H,r]
+            q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                               wk_b.astype(jnp.float32))
+            s_nope = jnp.einsum("bshr,bkr->bhsk", q_lat, ckv.astype(jnp.float32))
+            s_rope = jnp.einsum("bshd,bkd->bhsk", q_rope.astype(jnp.float32),
+                                krope.astype(jnp.float32))
+            scores = (s_nope + s_rope) * scale + bias
+            probs = jax.nn.softmax(scores, axis=-1)
+            o_lat = jnp.einsum("bhsk,bkr->bshr", probs, ckv.astype(jnp.float32))
+            out = jnp.einsum("bshr,rhv->bshv", o_lat, wv_b.astype(jnp.float32))
+        else:
+            kn = jnp.einsum("bkr,rhn->bkhn", ckv.astype(jnp.float32),
+                            wk_b.astype(jnp.float32))
+            vv = jnp.einsum("bkr,rhv->bkhv", ckv.astype(jnp.float32),
+                            wv_b.astype(jnp.float32))
+            s_nope = jnp.einsum("bshn,bkhn->bhsk", q_nope.astype(jnp.float32), kn)
+            s_rope = jnp.einsum("bshd,bkd->bhsk", q_rope.astype(jnp.float32),
+                                krope.astype(jnp.float32))
+            scores = (s_nope + s_rope) * scale + bias
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bhsk,bkhv->bshv", probs, vv)
+        out = out.astype(x.dtype).reshape(b, s, cfg.num_heads * cfg.v_head_dim)
+        return out @ params["wo"], cache
+
+    # train / prefill: materialize k, v per token (cheaper at large Sq=Sk)
+    q_nope, q_rope = _mla_q(params, cfg, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv, krope = _mla_latents(params, cfg, x, positions)
+    wk_b, wv_b = _wkv_b_split(params, cfg)
+    kn = jnp.einsum("bkr,rhn->bkhn", ckv, wk_b)
+    vv = jnp.einsum("bkr,rhv->bkhv", ckv, wv_b)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(
+        krope[:, :, None, :], (*krope.shape[:2], cfg.num_heads, krope.shape[-1])
+    ).astype(kn.dtype)], axis=-1)
+    bias = _mask_bias(positions, positions, None, True)
+    out = _sdpa(q, k, vv.astype(q.dtype), bias, scale)
+    out = out.reshape(b, s, cfg.num_heads * cfg.v_head_dim)
+    new_cache = None
+    if mode == "prefill":
+        cache = dict(cache)
+        cache["ckv"] = _write_seq(cache["ckv"], ckv, positions)
+        cache["krope"] = _write_seq(cache["krope"], krope, positions)
+        cache["pos"] = _write_seq(cache["pos"], positions, positions)
+        new_cache = cache
+    return out @ params["wo"], new_cache
+
+
+def attention(params, cfg: ModelConfig, x, positions, **kw):
+    if cfg.attention == "mla":
+        kw.pop("use_flash", None)
+        kw.pop("kv_override", None)
+        kw.pop("causal", None)
+        return mla_attention(params, cfg, x, positions, **kw)
+    return gqa_attention(params, cfg, x, positions, **kw)

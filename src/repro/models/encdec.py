@@ -1,0 +1,162 @@
+"""Whisper-style encoder-decoder.
+
+The audio conv frontend is a STUB per the assignment: callers provide
+precomputed frame embeddings ``[B, T_enc, D]``.  Encoder: bidirectional
+self-attention.  Decoder: causal self-attention + cross-attention over the
+encoder output; cross K/V are computed once at prefill and carried in the
+cache ("xk"/"xv" entries).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.common import (
+    apply_norm,
+    dense_init,
+    embed_init,
+    init_norm,
+    param_dtype,
+    split_keys,
+)
+from repro.models.mlp import init_mlp, mlp
+from repro.models.opts import DEFAULT_OPTS, ModelOpts
+
+
+def init_encdec(key, cfg: ModelConfig) -> Dict:
+    ks = split_keys(key, 6 + cfg.encoder_layers + cfg.num_layers)
+    dt = param_dtype(cfg)
+    enc_layers = []
+    for i in range(cfg.encoder_layers):
+        lk = split_keys(ks[6 + i], 4)
+        enc_layers.append({
+            "norm1": init_norm(lk[0], cfg),
+            "attn": attn_mod.init_attention(lk[1], cfg),
+            "norm2": init_norm(lk[2], cfg),
+            "mlp": init_mlp(lk[3], cfg),
+        })
+    dec_layers = []
+    for i in range(cfg.num_layers):
+        lk = split_keys(ks[6 + cfg.encoder_layers + i], 6)
+        dec_layers.append({
+            "norm1": init_norm(lk[0], cfg),
+            "attn": attn_mod.init_attention(lk[1], cfg),
+            "norm_x": init_norm(lk[2], cfg),
+            "xattn": attn_mod.init_cross_attention(lk[3], cfg),
+            "norm2": init_norm(lk[4], cfg),
+            "mlp": init_mlp(lk[5], cfg),
+        })
+    return {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dt),
+        "enc_norm": init_norm(ks[1], cfg),
+        "enc_layers": enc_layers,
+        "dec_layers": dec_layers,
+        "final_norm": init_norm(ks[2], cfg),
+        "lm_head": dense_init(ks[3], (cfg.d_model, cfg.padded_vocab), dt),
+    }
+
+
+def encode(params: Dict, cfg: ModelConfig, frames, *, opts: ModelOpts = DEFAULT_OPTS):
+    """frames [B, T_enc, D] (stub frontend output) -> encoder states."""
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    x = frames.astype(param_dtype(cfg))
+    for lp in params["enc_layers"]:
+        h, _ = attn_mod.gqa_attention(lp["attn"], cfg,
+                                      apply_norm(lp["norm1"], cfg, x),
+                                      positions, mode="train", causal=False)
+        x = x + h
+        x = x + mlp(lp["mlp"], apply_norm(lp["norm2"], cfg, x))
+    return apply_norm(params["enc_norm"], cfg, x)
+
+
+def _cross_kv(lp, cfg: ModelConfig, enc_out):
+    b, t, _ = enc_out.shape
+    hd = cfg.head_dim_
+    k = (enc_out @ lp["xattn"]["wk"]).reshape(b, t, cfg.num_kv_heads, hd)
+    v = (enc_out @ lp["xattn"]["wv"]).reshape(b, t, cfg.num_kv_heads, hd)
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    return k, v, pos
+
+
+def _decoder(params, cfg, tokens, positions, mode, caches, enc_out, opts):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    new_caches = []
+    for li, lp in enumerate(params["dec_layers"]):
+        cache = caches[li] if caches is not None else None
+        self_cache = cache["self"] if cache is not None else None
+        h, self_out = attn_mod.gqa_attention(
+            lp["attn"], cfg, apply_norm(lp["norm1"], cfg, x), positions,
+            mode=mode, cache=self_cache)
+        x = x + h
+        # cross attention: K/V from cache (decode) or computed fresh
+        if cache is not None and mode == "decode":
+            kv = (cache["xk"], cache["xv"], cache["xpos"])
+        else:
+            kv = _cross_kv(lp, cfg, enc_out)
+        h, _ = attn_mod.gqa_attention(
+            lp["xattn"], cfg, apply_norm(lp["norm_x"], cfg, x), positions,
+            mode=mode, cache=None, causal=False, kv_override=kv)
+        x = x + h
+        x = x + mlp(lp["mlp"], apply_norm(lp["norm2"], cfg, x))
+        if mode == "prefill":
+            k, v, pos = kv
+            new_caches.append({"self": self_out, "xk": k, "xv": v, "xpos": pos})
+        elif mode == "decode":
+            new_caches.append({"self": self_out, "xk": cache["xk"],
+                               "xv": cache["xv"], "xpos": cache["xpos"]})
+    x = apply_norm(params["final_norm"], cfg, x)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, (new_caches if mode != "train" else None)
+
+
+def encdec_loss(params, cfg: ModelConfig, batch, *, mesh=None,
+                opts: ModelOpts = DEFAULT_OPTS, aux_coef: float = 0.0):
+    """batch: frames [B,T,D], tokens [B,S], targets [B,S], mask [B,S]."""
+    del mesh, aux_coef
+    enc_out = encode(params, cfg, batch["frames"], opts=opts)
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    logits, _ = _decoder(params, cfg, batch["tokens"], positions, "train",
+                         None, enc_out, opts)
+    from repro.models.transformer import softmax_xent
+    xent = softmax_xent(logits, batch["targets"], batch["mask"].astype(jnp.float32))
+    return xent, {"xent": xent, "aux": jnp.zeros(())}
+
+
+def init_encdec_caches(cfg: ModelConfig, batch: int, max_len: int):
+    caches = []
+    dt = param_dtype(cfg)
+    t = cfg.encoder_seq_len
+    for _ in range(cfg.num_layers):
+        caches.append({
+            "self": attn_mod.init_cache(cfg, batch, max_len),
+            "xk": jnp.zeros((batch, t, cfg.num_kv_heads, cfg.head_dim_), dt),
+            "xv": jnp.zeros((batch, t, cfg.num_kv_heads, cfg.head_dim_), dt),
+            "xpos": jnp.zeros((batch, t), jnp.int32),
+        })
+    return caches
+
+
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens, caches, *,
+                   mesh=None, opts: ModelOpts = DEFAULT_OPTS):
+    del mesh
+    enc_out = encode(params, cfg, frames, opts=opts)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    logits, caches = _decoder(params, cfg, tokens, positions, "prefill",
+                              caches, enc_out, opts)
+    return logits[:, -1], caches
+
+
+def encdec_decode_step(params, cfg: ModelConfig, tokens, pos, caches, *,
+                       mesh=None, opts: ModelOpts = DEFAULT_OPTS):
+    del mesh
+    logits, caches = _decoder(params, cfg, tokens[:, None], pos, "decode",
+                              caches, None, opts)
+    return logits[:, 0], caches

@@ -1,0 +1,28 @@
+"""Dense SwiGLU MLP."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, param_dtype, split_keys
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    dt = param_dtype(cfg)
+    f = d_ff or cfg.d_ff
+    ks = split_keys(key, 2)
+    return {
+        # gate and up fused into one matmul: [D, 2F]
+        "w1": dense_init(ks[0], (cfg.d_model, 2 * f), dt),
+        "w2": dense_init(ks[1], (f, cfg.d_model), dt, in_axis_size=f),
+    }
+
+
+def mlp(params: Dict, x):
+    h = x @ params["w1"]
+    gate, up = jnp.split(h, 2, axis=-1)
+    return (jax.nn.silu(gate) * up) @ params["w2"]

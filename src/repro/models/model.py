@@ -1,0 +1,96 @@
+"""Unified model API: every arch behind the same five functions.
+
+    init_params(key, cfg)                  -> params pytree
+    loss_fn(params, cfg, batch, ...)       -> (loss, metrics)   [train]
+    prefill_fn(params, cfg, batch, caches) -> (logits, caches)
+    decode_fn(params, cfg, tokens, pos, caches) -> (logits, caches)
+    init_caches(cfg, batch, max_len)       -> cache pytree
+
+The dry-run, trainer, server and benchmarks all go through this module so an
+``--arch`` flag is the only thing that changes between architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.opts import DEFAULT_OPTS, ModelOpts
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    if cfg.is_encoder_decoder:
+        return encdec_mod.init_encdec(key, cfg)
+    return tf_mod.init_lm(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, mesh=None,
+            opts: ModelOpts = DEFAULT_OPTS):
+    if cfg.is_encoder_decoder:
+        return encdec_mod.encdec_loss(params, cfg, batch, mesh=mesh, opts=opts)
+    return tf_mod.lm_loss(params, cfg, batch, mesh=mesh, opts=opts)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.is_encoder_decoder:
+        return encdec_mod.init_encdec_caches(cfg, batch, max_len)
+    return tf_mod.init_caches(cfg, batch, max_len)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+
+
+def prefill_fn(params, cfg: ModelConfig, batch, caches, *, mesh=None,
+               opts: ModelOpts = DEFAULT_OPTS):
+    """batch: {"tokens": [B,S]} plus optional frames / prefix_embeds."""
+    if cfg.is_encoder_decoder:
+        return encdec_mod.encdec_prefill(params, cfg, batch["frames"],
+                                         batch["tokens"], caches,
+                                         mesh=mesh, opts=opts)
+    return tf_mod.prefill(params, cfg, batch["tokens"], caches,
+                          positions=batch.get("positions"),
+                          prefix_embeds=batch.get("prefix_embeds"),
+                          mesh=mesh, opts=opts)
+
+
+def decode_fn(params, cfg: ModelConfig, tokens, pos, caches, *, mesh=None,
+              opts: ModelOpts = DEFAULT_OPTS):
+    if cfg.is_encoder_decoder:
+        return encdec_mod.encdec_decode_step(params, cfg, tokens, pos, caches,
+                                             mesh=mesh, opts=opts)
+    return tf_mod.decode_step(params, cfg, tokens, pos, caches,
+                              mesh=mesh, opts=opts)
+
+
+# --------------------------------------------------------------------------- #
+# Synthetic batch builders (shapes only -- see launch/dryrun for specs)
+# --------------------------------------------------------------------------- #
+
+
+def make_train_batch(cfg: ModelConfig, key, batch: int, seq: int) -> Dict:
+    """Concrete random batch for smoke tests / examples."""
+    ks = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size),
+        "targets": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size),
+        "mask": jnp.ones((batch, seq), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+    elif cfg.prefix_embed_len:
+        out["prefix_embeds"] = jax.random.normal(
+            ks[2], (batch, cfg.prefix_embed_len, cfg.d_model), jnp.float32)
+    return out

@@ -1,0 +1,330 @@
+"""Mixture-of-Experts layer with per-layer (LExI) top-k.
+
+Three dispatch implementations, numerically equivalent up to capacity drops
+(tested against each other):
+
+``dense``         GShard-style one-hot dispatch/combine einsums.  Simple,
+                  differentiable, auto-partitioned by GSPMD.  Memory is
+                  O(T*E*C) for the dispatch mask -- the CPU / small-scale /
+                  profiling path (LExI Alg. 1 runs here); not viable at
+                  production token counts.
+
+``ep_a2a``        Production expert parallelism for train/prefill under
+                  ``shard_map``: tokens sharded over (pod, data, model),
+                  experts sharded over ``model``.  Scatter into per-expert
+                  capacity buffers, ``all_to_all`` over the model axis,
+                  grouped expert FFN (Pallas kernel on TPU), a2a back,
+                  weighted combine.  Collective bytes scale with sum_j k_j --
+                  a LExI plan buys communication, not just FLOPs.
+
+``ep_psum``       Decode-time expert parallelism: activations replicated over
+                  ``model``, each device computes only its local experts'
+                  contribution, partial outputs are ``psum``-reduced.  The
+                  right pattern when T (= decode batch) is small.
+
+The router follows each model family: softmax or sigmoid scoring, optional
+top-k renormalization, shared (always-on) experts.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, split_keys
+from repro.models.mlp import init_mlp, mlp
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    from repro.models.common import param_dtype
+    dt = param_dtype(cfg)
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = split_keys(key, 4)
+    p: Dict = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),  # router kept in f32
+        "w1": dense_init(ks[1], (e, d, 2 * f), dt),
+        "w2": dense_init(ks[2], (e, f, d), dt, in_axis_size=f),
+    }
+    if cfg.num_shared_experts:
+        sf = cfg.shared_expert_d_ff or cfg.moe_d_ff * cfg.num_shared_experts
+        p["shared"] = init_mlp(ks[3], cfg, d_ff=sf)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Router
+# --------------------------------------------------------------------------- #
+
+
+def route(params: Dict, cfg: ModelConfig, x2d, top_k: int):
+    """x2d [T, D] -> (weights [T,k] f32, idx [T,k] i32, aux_loss scalar)."""
+    logits = x2d.astype(jnp.float32) @ params["router"]          # [T, E]
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(scores, top_k)                  # [T, k]
+    if cfg.norm_topk_prob:
+        weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-20)
+    if cfg.dynamic_skip_tau > 0.0 and top_k >= 2:
+        # NAEE dynamic skipping baseline: drop low-confidence extra experts
+        thresh = cfg.dynamic_skip_tau * weights[:, :1]
+        keep = jnp.concatenate(
+            [jnp.ones_like(weights[:, :1], bool), weights[:, 1:] >= thresh], 1)
+        weights = weights * keep
+
+    # Switch-transformer load-balancing auxiliary loss (used in training).
+    e = cfg.num_experts
+    me = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=(0, 1))
+    ce = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return weights, idx, aux
+
+
+def capacity(t: int, top_k: int, num_experts: int, factor: float) -> int:
+    c = int(math.ceil(t * top_k / num_experts * factor))
+    return max(4, ((c + 3) // 4) * 4)  # pad to a multiple of 4 lanes
+
+
+# --------------------------------------------------------------------------- #
+# Slot assignment (shared by all implementations)
+# --------------------------------------------------------------------------- #
+
+
+def _slot_positions(idx, num_experts: int, cap: int):
+    """Per (token, k-slot) position within its expert's capacity buffer.
+
+    Token-major priority (earlier tokens keep their slots under overflow),
+    matching GShard.  Returns (pos [T,k] i32, keep [T,k] bool).
+    """
+    t, k = idx.shape
+    flat = idx.reshape(-1)                                        # [T*k]
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)   # [T*k, E]
+    pos_flat = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos_flat, flat[:, None], axis=1)[:, 0]
+    pos = pos.reshape(t, k)
+    keep = pos < cap
+    return pos, keep
+
+
+# --------------------------------------------------------------------------- #
+# Expert FFN over capacity buffers
+# --------------------------------------------------------------------------- #
+
+
+def expert_ffn(w1, w2, xe, use_kernel: bool = False):
+    """xe [E, C, D] -> [E, C, D] (SwiGLU per expert)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.moe_ffn(xe, w1, w2)
+    h = jnp.einsum("ecd,edf->ecf", xe, w1)
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _scatter(x2d, idx_eff, pos, keep, n_rows: int, cap: int):
+    """Scatter token copies into capacity buffers.
+
+    idx_eff [T,k] in [0, n_rows); dropped slots must carry keep=False.
+    Returns buffer [n_rows, cap, D].
+    """
+    t, k = idx_eff.shape
+    d = x2d.shape[-1]
+    slot = idx_eff * cap + jnp.where(keep, pos, 0)
+    flat_slot = jnp.where(keep, slot, n_rows * cap)               # trash row
+    buf = jnp.zeros((n_rows * cap + 1, d), x2d.dtype)
+    src = jnp.broadcast_to(x2d[:, None, :], (t, k, d)).reshape(t * k, d)
+    buf = buf.at[flat_slot.reshape(-1)].set(src, mode="drop")
+    return buf[: n_rows * cap].reshape(n_rows, cap, d)
+
+
+def _gather_combine(ye, weights, idx_eff, pos, keep, cap: int):
+    """ye [n_rows, C, D] -> y [T, D] weighted combine (dropped slots -> 0)."""
+    t, k = idx_eff.shape
+    d = ye.shape[-1]
+    slot = (idx_eff * cap + jnp.where(keep, pos, 0)).reshape(-1)
+    flat = ye.reshape(-1, d)
+    gathered = flat[slot].reshape(t, k, d)
+    w = (weights * keep).astype(jnp.float32)
+    return jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32), w)
+
+
+# --------------------------------------------------------------------------- #
+# dense (GShard einsum) path
+# --------------------------------------------------------------------------- #
+
+
+def moe_dense(params: Dict, cfg: ModelConfig, x2d, top_k: int,
+              use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x2d [T, D] -> (y2d [T, D], aux_loss)."""
+    t, d = x2d.shape
+    e = cfg.num_experts
+    weights, idx, aux = route(params, cfg, x2d, top_k)
+    cap = capacity(t, top_k, e, cfg.moe_capacity_factor)
+    pos, keep = _slot_positions(idx, e, cap)
+
+    xe = _scatter(x2d, idx, pos, keep, e, cap)                    # [E,C,D]
+    ye = expert_ffn(params["w1"], params["w2"], xe, use_kernel)
+    y = _gather_combine(ye, weights, idx, pos, keep, cap).astype(x2d.dtype)
+    y = _add_shared(params, cfg, x2d, y)
+    return y, aux
+
+
+def _add_shared(params, cfg, x2d, y):
+    if cfg.num_shared_experts:
+        y = y + mlp(params["shared"], x2d)
+    return y
+
+
+# --------------------------------------------------------------------------- #
+# ep_a2a: shard_map expert parallelism (train / prefill)
+# --------------------------------------------------------------------------- #
+
+
+def moe_ep_a2a_local(params, cfg: ModelConfig, x_local, top_k: int, *,
+                     model_axis: str, model_size: int, all_axes,
+                     use_kernel: bool = False, a2a_chunks: int = 1):
+    """shard_map body.  x_local [T_loc, D]; expert params sliced [E_loc,...]."""
+    e = cfg.num_experts
+    e_loc = e // model_size
+    t_loc, d = x_local.shape
+    cap = capacity(t_loc, top_k, e, cfg.moe_capacity_factor)
+
+    weights, idx, aux = route(params, cfg, x_local, top_k)
+    pos, keep = _slot_positions(idx, e, cap)
+    buf = _scatter(x_local, idx, pos, keep, e, cap)               # [E,C,D]
+    buf = buf.reshape(model_size, e_loc, cap, d)
+
+    def run_chunk(b):
+        # b [ms, E_loc, C', D] -> recv indexed by source shard on axis 0
+        recv = jax.lax.all_to_all(b, model_axis, split_axis=0, concat_axis=0)
+        xe = recv.transpose(1, 0, 2, 3).reshape(e_loc, model_size * b.shape[2], d)
+        ye = expert_ffn(params["w1"], params["w2"], xe, use_kernel)
+        ye = ye.reshape(e_loc, model_size, b.shape[2], d).transpose(1, 0, 2, 3)
+        return jax.lax.all_to_all(ye, model_axis, split_axis=0, concat_axis=0)
+
+    if a2a_chunks > 1 and cap % a2a_chunks == 0:
+        # split the capacity dim so XLA can overlap a2a with expert GEMMs
+        parts = jnp.split(buf, a2a_chunks, axis=2)
+        back = jnp.concatenate([run_chunk(b) for b in parts], axis=2)
+    else:
+        back = run_chunk(buf)
+
+    ye_local = back.reshape(e, cap, d)
+    y = _gather_combine(ye_local, weights, idx, pos, keep, cap).astype(x_local.dtype)
+    y = _add_shared(params, cfg, x_local, y)
+    return y, jax.lax.pmean(aux, all_axes)
+
+
+# --------------------------------------------------------------------------- #
+# ep_psum: shard_map expert parallelism (decode)
+# --------------------------------------------------------------------------- #
+
+
+def moe_ep_psum_local(params, cfg: ModelConfig, x_rep, top_k: int, *,
+                      model_axis: str, model_size: int, token_axes,
+                      use_kernel: bool = False):
+    """shard_map body for decode: ``x_rep`` [T, D] replicated over model axis;
+    expert params sliced [E_loc, ...].  Local contributions + psum."""
+    e = cfg.num_experts
+    e_loc = e // model_size
+    midx = jax.lax.axis_index(model_axis)
+    t, d = x_rep.shape
+
+    weights, idx, aux = route(params, cfg, x_rep, top_k)
+    lo = midx * e_loc
+    local = (idx >= lo) & (idx < lo + e_loc)                      # [T, k]
+    idx_loc = jnp.where(local, idx - lo, e_loc)                   # non-local -> trash
+    w_loc = jnp.where(local, weights, 0.0)
+
+    # worst case: all T*k slots land on one local expert -> cap = T*k is always
+    # safe; keep it tighter with the same global-capacity heuristic.
+    cap = capacity(t, top_k, e_loc, cfg.moe_capacity_factor)
+    pos, keep = _slot_positions(idx_loc, e_loc + 1, cap)
+    keep = keep & local
+    xe = _scatter(x_rep, idx_loc, pos, keep, e_loc + 1, cap)[:e_loc]
+    ye = expert_ffn(params["w1"], params["w2"], xe, use_kernel)
+    ye_pad = jnp.concatenate([ye, jnp.zeros((1, cap, d), ye.dtype)], axis=0)
+    y = _gather_combine(ye_pad, w_loc, idx_loc, pos, keep, cap)
+    y = jax.lax.psum(y, model_axis).astype(x_rep.dtype)
+    y = _add_shared(params, cfg, x_rep, y)
+    # aux is invariant over the model axis (same routing on every model
+    # shard): reduce over the token axes only
+    if token_axes:
+        aux = jax.lax.pmean(aux, token_axes)
+    return y, aux
+
+
+# --------------------------------------------------------------------------- #
+# Public entry
+# --------------------------------------------------------------------------- #
+
+
+def moe(params: Dict, cfg: ModelConfig, x, top_k: int, *,
+        impl: Optional[str] = None, mesh=None, use_kernel: bool = False,
+        a2a_chunks: int = 1):
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    ``impl`` overrides ``cfg.moe_impl``; shard_map impls require ``mesh``.
+    """
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    impl = impl or cfg.moe_impl
+    if impl == "dense" or mesh is None:
+        y, aux = moe_dense(params, cfg, x2d, top_k, use_kernel)
+        return y.reshape(b, s, d), aux
+
+    all_axes = tuple(mesh.axis_names)
+    model_axis = "model"
+    model_size = mesh.shape[model_axis]
+    token_axes = tuple(a for a in all_axes if a != model_axis)
+
+    if impl == "ep_a2a":
+        body = partial(moe_ep_a2a_local, cfg=cfg, top_k=top_k,
+                       model_axis=model_axis, model_size=model_size,
+                       all_axes=all_axes, use_kernel=use_kernel,
+                       a2a_chunks=a2a_chunks)
+        y2d, aux = jax.shard_map(
+            lambda p, xx: body(p, x_local=xx),
+            mesh=mesh,
+            in_specs=(_ep_param_specs(params, model_axis),
+                      P((*token_axes, model_axis), None)),
+            out_specs=(P((*token_axes, model_axis), None), P()),
+        )(params, x2d)
+    elif impl == "ep_psum":
+        body = partial(moe_ep_psum_local, cfg=cfg, top_k=top_k,
+                       model_axis=model_axis, model_size=model_size,
+                       token_axes=token_axes, use_kernel=use_kernel)
+        y2d, aux = jax.shard_map(
+            lambda p, xx: body(p, x_rep=xx),
+            mesh=mesh,
+            in_specs=(_ep_param_specs(params, model_axis),
+                      P(token_axes, None)),
+            out_specs=(P(token_axes, None), P()),
+        )(params, x2d)
+    else:
+        raise ValueError(f"unknown moe impl {impl!r}")
+    return y2d.reshape(b, s, d), aux
+
+
+def _ep_param_specs(params, model_axis: str):
+    specs = {
+        "router": P(None, None),
+        "w1": P(model_axis, None, None),
+        "w2": P(model_axis, None, None),
+    }
+    if "shared" in params:
+        specs["shared"] = {"w1": P(None, None), "w2": P(None, None)}
+    return specs

@@ -1,0 +1,50 @@
+"""Runtime model options (orthogonal to ModelConfig: how, not what)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelOpts:
+    #: attention implementation for train/prefill ("einsum" | "flash")
+    use_flash: bool = False
+    #: MoE dispatch implementation override (None -> cfg.moe_impl)
+    moe_impl: Optional[str] = None
+    #: use the Pallas grouped expert-FFN kernel inside MoE dispatch
+    use_moe_kernel: bool = False
+    #: split EP all-to-all into N chunks to overlap with expert GEMMs
+    a2a_chunks: int = 1
+    #: MLA decode with absorbed W_kv_b (production) vs materialized k/v
+    mla_absorb: bool = True
+    #: activation rematerialization for training: "none" | "full" | "dots"
+    remat: str = "none"
+    #: unroll layer-group scans (dry-run cost composition; see analysis/)
+    scan_unroll: bool = False
+    #: pin activations to batch-over-data at block boundaries (§Perf lever)
+    act_constraint: bool = False
+    #: attention score math: "f32" casts K/V to f32 (baseline, 2x cache
+    #: bytes); "bf16_accum32" keeps bf16 operands with f32 accumulation
+    #: (MXU-native on TPU) -- §Perf lever for decode cells
+    attn_compute_dtype: str = "f32"
+    #: context-parallel decode: shard the KV cache sequence dim over `model`
+    #: with a log-sum-exp combine (flash-decoding style).  Required to fit
+    #: long-context decode when kv_heads % model != 0 (§Perf cell B)
+    decode_kv_seq_shard: bool = False
+    #: fully-shard large weights over the data axes too (FSDP; per-layer
+    #: all-gather).  Required to fit models whose TP-only weight shard
+    #: exceeds HBM (§Perf cell A)
+    fsdp_params: bool = False
+    #: gradient-accumulation microbatches in the dry-run train step
+    #: (activation-memory lever; §Perf cell A)
+    microbatches: int = 1
+    #: two-level remat: checkpoint every N layers instead of every layer
+    #: (stash memory / N at zero extra recompute; §Perf cell A)
+    remat_chunk: int = 0
+    #: use the Pallas flash_decode kernel for (non-seq-sharded) decode
+    #: attention -- streams the KV cache through VMEM once in bf16
+    use_flash_decode: bool = False
+
+
+DEFAULT_OPTS = ModelOpts()

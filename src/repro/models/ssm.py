@@ -1,0 +1,217 @@
+"""Mamba2 (SSD / state-space duality) block.
+
+Chunked SSD forward for train/prefill (O(S*Q) memory with chunk length Q)
+and an O(1)-state recurrent step for decode -- this is what makes the
+``long_500k`` decode cell feasible for the SSM/hybrid archs.
+
+State cache (per layer):
+    ``{"conv": [B, W-1, Cc], "state": [B, H, P, N]}``
+with Cc = d_inner + 2*N conv channels, H heads of size P, state size N.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, param_dtype, split_keys
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    n = cfg.ssm_state_size
+    conv_ch = d_in + 2 * n        # x, B, C share the conv (ngroups = 1)
+    return d_in, nheads, cfg.ssm_head_dim, n, conv_ch
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+    dt = param_dtype(cfg)
+    d = cfg.d_model
+    d_in, h, p, n, cc = _dims(cfg)
+    ks = split_keys(key, 4)
+    # dt bias initialized so softplus(dt_bias) spans ~[1e-3, 1e-1]
+    u = jax.random.uniform(ks[2], (h,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * d_in + 2 * n + h), dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, cc), jnp.float32)
+                   * (1.0 / cfg.ssm_conv_width)).astype(dt),
+        "conv_b": jnp.zeros((cc,), dt),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dt),
+        "w_out": dense_init(ks[3], (d_in, d), dt, in_axis_size=d_in),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, width W: xbc [B,S,Cc], w [W,Cc]."""
+    width = w.shape[0]
+    xp = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    s = xbc.shape[1]
+    y = sum(xp[:, i : i + s, :] * w[i] for i in range(width))
+    return y + b
+
+
+def _conv_step(xbc_t, conv_state, w, b):
+    """One-token conv: xbc_t [B,Cc], conv_state [B,W-1,Cc] (oldest first)."""
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, xbc_t[:, None, :]], axis=1)  # [B,W,Cc]
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    new_state = window[:, 1:, :]
+    return y.astype(xbc_t.dtype), new_state
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_in, h, p, n, cc = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + cc]
+    dt = zxbcdt[..., d_in + cc :]
+    return z, xbc, dt
+
+
+def _gated_out(params, cfg: ModelConfig, y, z, eps: float = 1e-6):
+    """y, z [.., d_in]: RMSNorm(y * silu(z)) @ w_out."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + eps) * params["norm_scale"].astype(jnp.float32)
+    return g.astype(y.dtype) @ params["w_out"]
+
+
+def mamba_forward(
+    params: Dict,
+    cfg: ModelConfig,
+    x,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x [B,S,D] (train/prefill) or [B,1,D] (decode)."""
+    if mode == "decode":
+        return _mamba_step(params, cfg, x, cache)
+
+    b, s, d = x.shape
+    d_in, h, p, n, cc = _dims(cfg)
+    q = min(cfg.ssm_chunk, s)
+    if s % q:
+        raise ValueError(f"seq {s} not divisible by ssm chunk {q}")
+    nc = s // q
+
+    zxbcdt = x @ params["w_in"]
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs = xbc[..., :d_in].reshape(b, s, h, p)
+    bmat = xbc[..., d_in : d_in + n]                      # [B,S,N]
+    cmat = xbc[..., d_in + n :]                           # [B,S,N]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])             # [B,S,H]
+    a = -jnp.exp(params["A_log"])                         # [H] (negative)
+    da = dt * a                                           # [B,S,H]
+
+    # ---- chunked SSD ---- #
+    xs_c = xs.reshape(b, nc, q, h, p).astype(jnp.float32)
+    b_c = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    c_c = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    dt_c = dt.reshape(b, nc, q, h)
+    da_c = da.reshape(b, nc, q, h)
+    cum = jnp.cumsum(da_c, axis=2)                        # [B,nc,Q,H]
+
+    # intra-chunk ("attention-like") term
+    cb = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)          # [B,nc,Q,Q]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,nc,Q,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    att = jnp.where(mask[None, None, :, :, None], cb[..., None] * decay, 0.0)
+    att = att * dt_c[:, :, None, :, :]                    # [B,nc,Q(i),Q(j),H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xs_c)
+
+    # per-chunk final states
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)       # [B,nc,Q,H]
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                        decay_states * dt_c, b_c, xs_c)   # [B,nc,H,P,N]
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # [B,nc,H]
+    init_state = (cache["state"].astype(jnp.float32) if (cache is not None)
+                  else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def scan_body(carry, inp):
+        st_in = carry
+        st_chunk, cd = inp                                # [B,H,P,N], [B,H]
+        st_out = st_in * cd[:, :, None, None] + st_chunk
+        return st_out, st_in                              # emit state *before* chunk
+
+    xs_scan = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    final_state, st_prev = jax.lax.scan(scan_body, init_state, xs_scan,
+                                        unroll=True if cfg.ssm_scan_unroll else 1)
+    st_prev = jnp.moveaxis(st_prev, 0, 1)                 # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         c_c, st_prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + params["D"][None, None, :, None] * xs_c.reshape(b, s, h, p)
+    y = y.astype(x.dtype).reshape(b, s, d_in)
+    out = _gated_out(params, cfg, y, z)
+
+    new_cache = None
+    if mode == "prefill":
+        width = cfg.ssm_conv_width
+        pre = xbc_raw_tail(x, params, cfg, s, width)      # last W-1 pre-activation
+        new_cache = {"conv": pre, "state": final_state.astype(jnp.float32)}
+    return out, new_cache
+
+
+def xbc_raw_tail(x, params, cfg, s, width):
+    """Recompute the last W-1 *pre-conv* xbc inputs (conv state for decode)."""
+    tail = x[:, max(0, s - (width - 1)) :, :]
+    zxbcdt = tail @ params["w_in"]
+    _, xbc, _ = _split_proj(cfg, zxbcdt)
+    b = x.shape[0]
+    cc = xbc.shape[-1]
+    if xbc.shape[1] < width - 1:  # left-pad with zeros if seq < W-1
+        pad = jnp.zeros((b, width - 1 - xbc.shape[1], cc), xbc.dtype)
+        xbc = jnp.concatenate([pad, xbc], axis=1)
+    return xbc
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> Dict:
+    d_in, h, p, n, cc = _dims(cfg)
+    dt = param_dtype(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, cc), dt),
+        "state": jnp.zeros((batch, h, p, n), jnp.float32),
+    }
+
+
+def _mamba_step(params, cfg: ModelConfig, x, cache):
+    """Single-token recurrence: x [B,1,D]."""
+    b = x.shape[0]
+    d_in, h, p, n, cc = _dims(cfg)
+    zxbcdt = x[:, 0, :] @ params["w_in"]                  # [B, ...]
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc_conv, new_conv = _conv_step(xbc, cache["conv"], params["conv_w"],
+                                    params["conv_b"])
+    xbc_conv = jax.nn.silu(xbc_conv)
+    xs = xbc_conv[..., :d_in].reshape(b, h, p).astype(jnp.float32)
+    bmat = xbc_conv[..., d_in : d_in + n].astype(jnp.float32)   # [B,N]
+    cmat = xbc_conv[..., d_in + n :].astype(jnp.float32)        # [B,N]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a)                                  # [B,H]
+
+    state = cache["state"]                                # [B,H,P,N] f32
+    state = (state * da[:, :, None, None]
+             + jnp.einsum("bh,bn,bhp->bhpn", dt, bmat, xs))
+    y = jnp.einsum("bn,bhpn->bhp", cmat, state)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    out = _gated_out(params, cfg, y, z[:, None, :])
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "state": state}

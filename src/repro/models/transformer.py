@@ -1,0 +1,179 @@
+"""Decoder-only LM assembly: embeddings, layer stack, head, losses, steps.
+
+Supports the plain LM, the VLM variant (precomputed patch embeddings
+concatenated ahead of the token embeddings -- frontend stub per assignment),
+and exposes train / prefill / decode entry points used by the launcher,
+serving engine and dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as blocks_mod
+from repro.models.common import (
+    apply_norm,
+    dense_init,
+    embed_init,
+    init_norm,
+    param_dtype,
+    split_keys,
+)
+from repro.models.opts import DEFAULT_OPTS, ModelOpts
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict:
+    ks = split_keys(key, 4)
+    dt = param_dtype(cfg)
+    p: Dict = {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dt),
+        "stack": blocks_mod.init_stack(ks[1], cfg),
+        "final_norm": init_norm(ks[2], cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[3], (cfg.d_model, cfg.padded_vocab), dt)
+    if cfg.prefix_embed_len:
+        p["prefix_proj"] = dense_init(ks[3], (cfg.d_model, cfg.d_model), dt)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Forward pieces
+# --------------------------------------------------------------------------- #
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def lm_logits(params, cfg: ModelConfig, x):
+    x = apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head).astype(jnp.float32)
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens,
+    positions,
+    *,
+    mode: str = "train",
+    caches=None,
+    prefix_embeds=None,
+    mesh=None,
+    opts: ModelOpts = DEFAULT_OPTS,
+):
+    """tokens [B,S]; positions [B,S] (train/prefill) or [B] (decode).
+
+    Returns (hidden [B,S,D], new_caches, aux_loss).
+    """
+    x = embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        pre = prefix_embeds.astype(x.dtype) @ params["prefix_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+    x, new_caches, aux = blocks_mod.apply_stack(
+        params["stack"], cfg, x, positions, mode=mode, caches=caches,
+        mesh=mesh, opts=opts)
+    return x, new_caches, aux
+
+
+# --------------------------------------------------------------------------- #
+# Training loss
+# --------------------------------------------------------------------------- #
+
+
+def softmax_xent(logits, targets, mask):
+    """logits [B,S,V] f32, targets [B,S] i32, mask [B,S] {0,1}."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / denom
+
+
+def lm_loss(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict,
+    *,
+    mesh=None,
+    opts: ModelOpts = DEFAULT_OPTS,
+    aux_coef: float = 0.01,
+):
+    """batch: tokens [B,S], targets [B,S], mask [B,S], opt. prefix_embeds."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    pre = batch.get("prefix_embeds")
+    plen = pre.shape[1] if pre is not None else 0
+    positions = jnp.broadcast_to(jnp.arange(s + plen)[None], (b, s + plen))
+    hidden, _, aux = forward(params, cfg, tokens, positions, mode="train",
+                             prefix_embeds=pre, mesh=mesh, opts=opts)
+    hidden = hidden[:, plen:]                         # loss on token part only
+    logits = lm_logits(params, cfg, hidden)
+    xent = softmax_xent(logits, batch["targets"], batch["mask"].astype(jnp.float32))
+    loss = xent + aux_coef * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# Inference steps
+# --------------------------------------------------------------------------- #
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return blocks_mod.init_stack_cache(cfg, batch, max_len)
+
+
+def prefill(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens,
+    caches,
+    *,
+    positions=None,
+    prefix_embeds=None,
+    mesh=None,
+    opts: ModelOpts = DEFAULT_OPTS,
+):
+    """Populate caches with a full prompt.  Returns (last_logits [B,V], caches).
+
+    ``positions`` may carry -1 for pad tokens: they are masked out of
+    attention (the position-based bias treats pos<0 as invalid) and their
+    cache writes land on an already-masked trash slot.
+    """
+    b, s = tokens.shape
+    plen = prefix_embeds.shape[1] if prefix_embeds is not None else 0
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s + plen)[None], (b, s + plen))
+    hidden, caches, _ = forward(params, cfg, tokens, positions, mode="prefill",
+                                caches=caches, prefix_embeds=prefix_embeds,
+                                mesh=mesh, opts=opts)
+    logits = lm_logits(params, cfg, hidden[:, -1:])[:, 0]
+    return logits, caches
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens,        # [B] current token ids
+    pos,           # [B] absolute positions of those tokens
+    caches,
+    *,
+    mesh=None,
+    opts: ModelOpts = DEFAULT_OPTS,
+):
+    """One decode step.  Returns (logits [B,V] f32, updated caches)."""
+    hidden, caches, _ = forward(params, cfg, tokens[:, None], pos, mode="decode",
+                                caches=caches, mesh=mesh, opts=opts)
+    logits = lm_logits(params, cfg, hidden)[:, 0]
+    return logits, caches

@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamW, AdamWState  # noqa: F401

@@ -1,0 +1,77 @@
+"""AdamW with f32 moments (no external deps) + ZeRO-1-style state sharding.
+
+The optimizer state holds per-parameter first/second moments in float32.  At
+production scale the moments dominate memory (2 x 4 bytes/param), so
+``sharding/rules.opt_state_specs`` additionally shards them over the data
+axes (ZeRO-1): legal because the update is elementwise.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray       # scalar i32
+    mu: Any                 # pytree like params, f32
+    nu: Any                 # pytree like params, f32
+
+
+@dataclass(frozen=True)
+class AdamW:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+    def schedule(self, step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(self.warmup_steps, 1)
+        prog = (step - self.warmup_steps) / jnp.maximum(
+            self.total_steps - self.warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = self.min_lr_frac + (1 - self.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return self.peak_lr * jnp.where(step < self.warmup_steps, warm, cos)
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / c1
+            vh = v / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * delta).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree.map(lambda t: t[0], flat,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    def apply_updates(self, params, updates):
+        return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,53 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor symmetric quantization of gradients before the DP all-reduce,
+with an error-feedback accumulator (Seide et al. / 1-bit SGD lineage): the
+quantization residual is carried into the next step, so compression bias
+vanishes and convergence tracks the uncompressed run (tested).
+
+On a real pod this shrinks DP all-reduce bytes 4x (f32->i8) on the slow
+inter-pod links ("pod" axis carries only gradient traffic -- launch/mesh.py).
+In this repo the quantize/dequantize pair runs inside the step function, so
+numerics are exactly what the compressed collective would produce.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, err_state) -> Tuple[Any, Any]:
+    """Returns (dequantized grads as seen post-all-reduce, new error state)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e          # apply error feedback
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale      # what the collective carries
+        return deq.astype(g.dtype), g32 - deq    # residual -> next step
+
+    pairs = jax.tree.map(one, grads, err_state)
+    deq = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return deq, err
+
+
+def compression_bytes_saved(params) -> int:
+    """All-reduce byte reduction per step (f32 -> i8 + per-tensor scale)."""
+    import numpy as np
+    total = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    return total * 4 - (total + 4 * len(jax.tree.leaves(params)))

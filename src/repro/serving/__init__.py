@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine, Request, Result  # noqa: F401
+from repro.serving.sampling import sample  # noqa: F401

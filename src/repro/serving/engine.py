@@ -1,0 +1,213 @@
+"""Batched serving engine with continuous batching and LExI-planned decode.
+
+The engine owns a slot-batched KV cache (``max_batch`` slots, ``max_len``
+positions).  Requests are admitted into free slots as they open (continuous
+batching "lite" -- the vLLM scheduling idea mapped onto static XLA shapes):
+
+  * ``prefill`` runs per-admission on a [1, padded_prompt] graph and its
+    cache is scattered into the slot;
+  * one jitted ``decode`` step advances every active slot per iteration;
+  * finished sequences (eos / budget) free their slot immediately.
+
+A ``ModelConfig`` carrying a LExI plan serves with per-layer top-k: the plan
+changes *static* dispatch shapes, so one engine instance == one compiled
+specialization (DESIGN.md §1 -- this is the TPU-native version of the paper's
+vLLM integration).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.models.opts import DEFAULT_OPTS, ModelOpts
+from repro.serving.sampling import sample
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # [L] int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+
+@dataclass
+class Result:
+    uid: int
+    tokens: List[int] = field(default_factory=list)
+    prompt_len: int = 0
+    finished_reason: str = ""
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 512, prefill_pad: int = 64,
+                 eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
+                 mesh=None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.prefill_pad = prefill_pad
+        self.eos_id = eos_id
+        self.opts = opts
+        self.mesh = mesh
+        self.key = jax.random.PRNGKey(seed)
+
+        self.caches = models.init_caches(cfg, max_batch, max_len)
+        self.slot_pos = np.zeros(max_batch, np.int32)       # next position
+        self.slot_req: List[Optional[Result]] = [None] * max_batch
+        self.slot_budget = np.zeros(max_batch, np.int32)
+        self.slot_temp = np.zeros(max_batch, np.float32)
+        self.slot_last = np.zeros(max_batch, np.int32)      # last sampled token
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0}
+        self._finished_in_admit: List[Result] = []
+
+        self._decode = jax.jit(
+            lambda p, t, pos, c: models.decode_fn(p, cfg, t, pos, c,
+                                                  mesh=mesh, opts=opts))
+        self._prefills: Dict[int, any] = {}
+
+    # ------------------------------------------------------------------ #
+    # internals
+    # ------------------------------------------------------------------ #
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefills:
+            def fn(p, tokens, positions, caches):
+                return models.prefill_fn(
+                    p, self.cfg, {"tokens": tokens, "positions": positions},
+                    caches, mesh=self.mesh, opts=self.opts)
+            self._prefills[plen] = jax.jit(fn)
+        return self._prefills[plen]
+
+    def _scatter_cache(self, slot: int, one_cache, pad_start: int):
+        """Write a 1-slot cache into batch slot ``slot`` (per-leaf batch dim).
+
+        Positions < ``pad_start`` (the left padding of the prompt window) are
+        marked -1 in the ``pos`` buffers so attention never sees pad tokens --
+        conditioning is exact for attention archs.  SSM states have no
+        position mask; pure-SSM archs condition on the (token-0) pad prefix
+        unless prompts are sized to ``prefill_pad`` (documented).
+        """
+        from repro.sharding.rules import _CACHE_RANKS, _path_str
+
+        def write(path, full, one):
+            ps = _path_str(path)
+            base = next((r for rx, r in _CACHE_RANKS if rx.search(ps)), None)
+            if base is None:
+                return full
+            if ps.endswith("pos") and pad_start > 0:
+                one = jnp.where((one >= 0) & (one < pad_start), -1, one)
+            bdim = full.ndim - base
+            idx = tuple([slice(None)] * bdim + [slice(slot, slot + 1)])
+            return full.at[idx].set(one.astype(full.dtype))
+
+        self.caches = jax.tree_util.tree_map_with_path(write, self.caches,
+                                                       one_cache)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    # ------------------------------------------------------------------ #
+    # public API
+    # ------------------------------------------------------------------ #
+    def admit(self, req: Request) -> bool:
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        plen = len(req.prompt)
+        pad = ((plen + self.prefill_pad - 1) // self.prefill_pad
+               ) * self.prefill_pad
+        pad = min(pad, self.max_len)
+        tokens = np.zeros((1, pad), np.int32)
+        tokens[0, -plen:] = req.prompt                       # right-aligned
+        # pad tokens get position -1 (attention-masked); prompt gets 0..plen-1
+        positions = np.full((1, pad), -1, np.int32)
+        positions[0, -plen:] = np.arange(plen)
+        one_cache = models.init_caches(self.cfg, 1, self.max_len)
+        logits, one_cache = self._prefill_fn(pad)(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            one_cache)
+        self._scatter_cache(slot, one_cache, 0)
+
+        res = Result(uid=req.uid, prompt_len=plen)
+        self.slot_req[slot] = res
+        self.slot_pos[slot] = plen
+        self.slot_budget[slot] = req.max_new_tokens
+        self.slot_temp[slot] = req.temperature
+        self.key, sub = jax.random.split(self.key)
+        first = sample(logits, sub, temperature=req.temperature)
+        tok = int(first[0])
+        self.slot_last[slot] = tok
+        res.tokens.append(tok)
+        self.slot_budget[slot] -= 1
+        self.stats["prefill_tokens"] += plen
+        # the prefill-sampled token may already terminate the request
+        if (self.eos_id is not None and tok == self.eos_id) \
+                or self.slot_budget[slot] <= 0:
+            res.finished_reason = ("eos" if self.eos_id is not None
+                                   and tok == self.eos_id else "length")
+            self.slot_req[slot] = None
+            self._finished_in_admit.append(res)
+        return True
+
+    def step(self) -> List[Result]:
+        """One decode step over all active slots; returns finished results."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        tokens = jnp.asarray(self.slot_last)
+        pos = jnp.asarray(self.slot_pos)
+        logits, self.caches = self._decode(self.params, tokens, pos,
+                                           self.caches)
+        self.key, sub = jax.random.split(self.key)
+        temp = float(np.max(self.slot_temp[active]))
+        nxt = np.asarray(sample(logits, sub, temperature=temp))
+        self.stats["steps"] += 1
+
+        finished: List[Result] = []
+        for i in active:
+            self.slot_pos[i] += 1
+            tok = int(nxt[i])
+            res = self.slot_req[i]
+            res.tokens.append(tok)
+            self.slot_last[i] = tok
+            self.slot_budget[i] -= 1
+            self.stats["decode_tokens"] += 1
+            done_eos = self.eos_id is not None and tok == self.eos_id
+            done_len = (self.slot_budget[i] <= 0
+                        or self.slot_pos[i] >= self.max_len - 1)
+            if done_eos or done_len:
+                res.finished_reason = "eos" if done_eos else "length"
+                finished.append(res)
+                self.slot_req[i] = None
+        return finished
+
+    def serve(self, requests: Sequence[Request]) -> List[Result]:
+        """Run a full workload with continuous batching; returns all results."""
+        pending = list(requests)
+        done: List[Result] = []
+        t0 = time.time()
+        while pending or any(r is not None for r in self.slot_req):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            done.extend(self._finished_in_admit)
+            self._finished_in_admit.clear()
+            done.extend(self.step())
+        self.stats["wall_s"] = time.time() - t0
+        return sorted(done, key=lambda r: r.uid)
+
+    def throughput(self) -> float:
+        """Tokens (prompt + generated) per second over the last serve()."""
+        wall = self.stats.get("wall_s", 0.0)
+        tok = self.stats["prefill_tokens"] + self.stats["decode_tokens"]
+        return tok / wall if wall > 0 else float("nan")

@@ -1,0 +1,12 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_spec,
+    batch_specs,
+    cache_specs,
+    data_axes,
+    data_axes_size,
+    named,
+    opt_state_specs,
+    param_shardings,
+    param_specs,
+    spec_for_param,
+)

@@ -1,0 +1,282 @@
+"""Divisibility-aware sharding rules: param paths -> PartitionSpecs.
+
+The rules encode the production layout (DESIGN.md §5):
+
+  * vocab dims shard over ``model`` (vocab is padded to stay divisible);
+  * attention/MLP projections shard their flattened feature dim over
+    ``model`` (Megatron column/row parallel) -- head-count divisibility is
+    never required because GSPMD reshards around the attention einsum;
+  * MoE expert weights shard the **expert** dim over ``model`` (EP) when
+    divisible, else fall back to feature sharding (TP);
+  * batch-like leading dims (batches, KV caches) shard over the data axes
+    when divisible, else replicate (e.g. the global_batch=1 long-context
+    cell);
+  * every rule checks divisibility against the actual mesh axis size and
+    degrades to replication rather than producing an invalid spec.
+
+Optimizer moments additionally shard a spare dim over ``data`` (ZeRO-1).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.configs.base import ModelConfig
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def data_axes_size(mesh: Mesh) -> int:
+    s = 1
+    for a in data_axes(mesh):
+        s *= _axis(mesh, a)
+    return s
+
+
+# --------------------------------------------------------------------------- #
+# Parameter rules
+# --------------------------------------------------------------------------- #
+
+# (path regex, base rank, trailing spec builder)
+# The spec builder receives (trailing_shape, model_size) and returns a tuple
+# of axis entries for those trailing dims.
+
+
+def _col(shape, m):       # [in, out] -> shard out over model
+    return (None, "model" if _div(shape[1], m) else None)
+
+
+def _row(shape, m):       # [in, out] -> shard in over model
+    return ("model" if _div(shape[0], m) else None, None)
+
+
+def _embed(shape, m):     # [V, D]
+    return ("model" if _div(shape[0], m) else None, None)
+
+
+def _moe_w(shape, m):     # [E, a, b] -> EP over experts, else feature TP
+    if _div(shape[0], m):
+        return ("model", None, None)
+    if _div(shape[2], m):
+        return (None, None, "model")
+    return (None, None, None)
+
+
+def _repl(shape, m):
+    return tuple(None for _ in shape)
+
+
+_RULES = (
+    (re.compile(r"\bembed$"), 2, _embed),
+    (re.compile(r"\blm_head$"), 2, _col),
+    (re.compile(r"\bprefix_proj$"), 2, _repl),
+    # MoE (must precede generic w1/w2)
+    (re.compile(r"moe.*\brouter$"), 2, _repl),
+    (re.compile(r"moe.*\bw1$"), 3, _moe_w),
+    (re.compile(r"moe.*\bw2$"), 3, _moe_w),
+    (re.compile(r"shared.*\bw1$"), 2, _col),
+    (re.compile(r"shared.*\bw2$"), 2, _row),
+    # attention
+    (re.compile(r"\bwq$|\bwk$|\bwv$|\bwq_b$|\bwkv_b$"), 2, _col),
+    (re.compile(r"\bwo$"), 2, _row),
+    (re.compile(r"\bwq_a$|\bwkv_a$"), 2, _repl),   # small latent projections
+    # MLP
+    (re.compile(r"\bw1$"), 2, _col),
+    (re.compile(r"\bw2$"), 2, _row),
+    # mamba
+    (re.compile(r"\bw_in$"), 2, _repl),            # mixed-channel output; see note
+    (re.compile(r"\bw_out$"), 2, _row),
+    (re.compile(r"\bconv_w$|\bconv_b$"), None, _repl),
+    (re.compile(r"\bA_log$|\bdt_bias$|\bnorm_scale$"), None, _repl),
+    (re.compile(r"\bD$"), None, _repl),
+    # norms / everything else
+    (re.compile(r"."), None, _repl),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_param(path_str: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    m = _axis(mesh, "model")
+    for rx, base_rank, fn in _RULES:
+        if rx.search(path_str):
+            if base_rank is None:
+                return P()
+            extra = len(shape) - base_rank
+            if extra < 0:
+                return P()
+            trailing = fn(shape[extra:], m)
+            return P(*([None] * extra), *trailing)
+    return P()
+
+
+def param_specs(params_tree, cfg: ModelConfig, mesh: Mesh,
+                fsdp: bool = False, fsdp_min_size: int = 1 << 20):
+    """PartitionSpec tree mirroring an (abstract) param tree.
+
+    ``fsdp=True`` additionally shards a spare dim of every large parameter
+    over the data axes (fully-sharded weights; XLA inserts per-layer
+    all-gathers).  Required where TP-only sharding exceeds HBM -- e.g.
+    qwen3-moe-235b params are 29.4 GB/chip at model=16 but 1.9 GB/chip with
+    FSDP over data=16 (EXPERIMENTS.md §Perf cell A).
+    """
+    del cfg
+
+    def leaf_spec(path, leaf):
+        spec = spec_for_param(_path_str(path), leaf.shape, mesh)
+        if fsdp and int(np_prod(leaf.shape)) >= fsdp_min_size:
+            spec = _zero1(spec, leaf.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for d in shape:
+        out *= int(d)
+    return out
+
+
+def param_shardings(params_tree, cfg: ModelConfig, mesh: Mesh, **kw):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_tree, cfg, mesh, **kw))
+
+
+# --------------------------------------------------------------------------- #
+# Optimizer state: ZeRO-1 over the data axes
+# --------------------------------------------------------------------------- #
+
+
+def _zero1(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Additionally shard the largest free dim over the data axes."""
+    daxes = data_axes(mesh)
+    dsize = data_axes_size(mesh)
+    if dsize == 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # already data-sharded (e.g. FSDP param specs fed to opt_state_specs)
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    if used & set(daxes):
+        return P(*entries)
+    best, best_dim = -1, -1
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and _div(dim, dsize) and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        entries[best] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*entries)
+
+
+def opt_state_specs(opt_state_abstract, params_specs, mesh: Mesh):
+    """Specs for AdamWState(step, mu, nu): moments ZeRO-1 sharded."""
+    from repro.optim.adamw import AdamWState
+
+    def moment_spec(spec, leaf):
+        return _zero1(spec, leaf.shape, mesh)
+
+    mu = jax.tree.map(moment_spec, params_specs, opt_state_abstract.mu)
+    nu = jax.tree.map(moment_spec, params_specs, opt_state_abstract.nu)
+    return AdamWState(step=P(), mu=mu, nu=nu)
+
+
+# --------------------------------------------------------------------------- #
+# Batch / cache rules
+# --------------------------------------------------------------------------- #
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard dim0 (batch) over the data axes when divisible."""
+    daxes = data_axes(mesh)
+    dsize = data_axes_size(mesh)
+    if shape and _div(shape[0], dsize):
+        first = daxes if len(daxes) > 1 else daxes[0]
+        return P(first, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def tokens_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    return batch_spec(shape, mesh)
+
+
+def batch_specs(batch_tree, mesh: Mesh):
+    return jax.tree.map(lambda l: batch_spec(l.shape, mesh), batch_tree)
+
+
+# cache leaf base ranks (without the stacked-group layer dim)
+_CACHE_RANKS = (
+    (re.compile(r"(^|/)(k|v|xk|xv)$"), 4),        # [B, S, Hkv, hd]
+    (re.compile(r"(^|/)(pos|xpos)$"), 2),         # [B, S]
+    (re.compile(r"(^|/)(ckv|krope)$"), 3),        # [B, S, r]
+    (re.compile(r"(^|/)conv$"), 3),               # [B, W-1, Cc]
+    (re.compile(r"(^|/)state$"), 4),              # [B, H, P, N]
+)
+
+
+def cache_specs(cache_tree, cfg: ModelConfig, mesh: Mesh,
+                seq_shard: bool = False):
+    """KV/SSM cache sharding: batch over data; heads over model.
+
+    ``seq_shard=True`` shards the GQA cache *sequence* dim over ``model``
+    instead (context-parallel decode; pairs with
+    ``ModelOpts.decode_kv_seq_shard``).  Handles the extra leading layer dim
+    of stacked (scanned) groups.
+    """
+    del cfg
+    m = _axis(mesh, "model")
+    daxes = data_axes(mesh)
+    dsize = data_axes_size(mesh)
+    dentry = daxes if len(daxes) > 1 else daxes[0]
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        base = next((r for rx, r in _CACHE_RANKS if rx.search(ps)), None)
+        if base is None or len(shape) < base:
+            return P(*([None] * len(shape)))
+        extra = len(shape) - base                  # 1 if stacked group
+        entries = [None] * len(shape)
+        if _div(shape[extra], dsize):
+            entries[extra] = dentry                # batch dim
+        gqa = re.search(r"(^|/)(k|v)$", ps)
+        if seq_shard and (gqa or re.search(r"(^|/)pos$", ps)) \
+                and base in (4, 2) and _div(shape[extra + 1], m):
+            entries[extra + 1] = "model"           # sequence dim (ctx parallel)
+        elif re.search(r"(^|/)(k|v|xk|xv)$", ps) and _div(shape[extra + 2], m):
+            entries[extra + 2] = "model"           # kv heads
+        if ps.endswith("state") and _div(shape[extra + 1], m):
+            entries[extra + 1] = "model"           # mamba heads
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)

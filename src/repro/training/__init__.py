@@ -1,0 +1,2 @@
+from repro.training.loop import TrainResult, eval_perplexity, train  # noqa: F401
+from repro.training.step import TrainState, init_state, make_train_step  # noqa: F401

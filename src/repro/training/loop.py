@@ -1,0 +1,150 @@
+"""Fault-tolerant training loop.
+
+Responsibilities:
+  * auto-resume from the latest checkpoint (params, optimizer, data position);
+  * periodic atomic checkpoints (async writer -- no step stall);
+  * a step-time watchdog for straggler detection: steps slower than
+    ``straggler_factor`` x the running median are counted and surfaced (on a
+    real pod this signal feeds the controller that triggers
+    checkpoint-and-reshard; here it is logged and returned);
+  * deterministic restart: the data pipeline replays from the checkpointed
+    step, so crash + resume reproduces the uninterrupted run exactly
+    (verified bit-exact in tests/test_train.py).
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro import models
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import Pipeline
+from repro.data.synthetic import DataConfig
+from repro.models.opts import DEFAULT_OPTS, ModelOpts
+from repro.optim import AdamW
+from repro.training.step import TrainState, init_state, make_train_step
+
+
+@dataclass
+class TrainResult:
+    steps_run: int
+    final_step: int
+    losses: List[float]
+    step_times: List[float]
+    straggler_steps: int
+    resumed_from: Optional[int]
+    state: Any = field(repr=False, default=None)
+
+
+def train(
+    cfg: ModelConfig,
+    dc: DataConfig,
+    *,
+    total_steps: int,
+    optimizer: Optional[AdamW] = None,
+    opts: ModelOpts = DEFAULT_OPTS,
+    mesh=None,
+    seed: int = 0,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    ckpt_async: bool = True,
+    resume: bool = True,
+    microbatches: int = 1,
+    compression: bool = False,
+    straggler_factor: float = 2.0,
+    log_every: int = 10,
+    crash_at_step: Optional[int] = None,   # fault-injection for tests
+    verbose: bool = False,
+) -> TrainResult:
+    optimizer = optimizer or AdamW(total_steps=total_steps)
+    step_fn = jax.jit(make_train_step(
+        cfg, optimizer, opts=opts, mesh=mesh, microbatches=microbatches,
+        compression=compression))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    resumed_from = None
+    state = init_state(jax.random.PRNGKey(seed), cfg, optimizer,
+                       compression=compression)
+    if mgr and resume and mgr.latest_step() is not None:
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        state, meta = mgr.restore(abstract)
+        start_step = meta["step"]
+        resumed_from = start_step
+        if verbose:
+            print(f"[resume] restored step {start_step} from {ckpt_dir}")
+
+    losses: List[float] = []
+    times: List[float] = []
+    stragglers = 0
+
+    with Pipeline(dc, start_step=start_step) as pipe:
+        step = start_step
+        for batch in pipe:
+            if step >= total_steps:
+                break
+            t0 = time.time()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            losses.append(loss)
+            times.append(dt)
+            step += 1
+
+            # straggler watchdog
+            if len(times) >= 5:
+                med = statistics.median(times[-50:])
+                if dt > straggler_factor * med:
+                    stragglers += 1
+                    if verbose:
+                        print(f"[watchdog] step {step} took {dt:.3f}s "
+                              f"(median {med:.3f}s) -- straggler")
+
+            if verbose and step % log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+
+            if mgr and step % ckpt_every == 0:
+                mgr.save(step, state, blocking=not ckpt_async,
+                         extra={"loss": loss})
+
+            if crash_at_step is not None and step == crash_at_step:
+                mgr and mgr.wait()
+                raise RuntimeError(f"injected crash at step {step}")
+
+    if mgr:
+        mgr.save(step, state, blocking=True, extra={"final": True})
+        mgr.wait()
+
+    return TrainResult(steps_run=step - start_step, final_step=step,
+                       losses=losses, step_times=times,
+                       straggler_steps=stragglers, resumed_from=resumed_from,
+                       state=state)
+
+
+def eval_perplexity(state_or_params, cfg: ModelConfig, dc: DataConfig, *,
+                    steps: int = 8, start_step: int = 10_000,
+                    opts: ModelOpts = DEFAULT_OPTS) -> float:
+    """Held-out perplexity on fresh synthetic batches (quality proxy)."""
+    params = getattr(state_or_params, "params", state_or_params)
+    from repro.data.synthetic import sample_batch
+
+    @jax.jit
+    def xent(p, batch):
+        loss, m = models.loss_fn(p, cfg, batch, opts=opts)
+        return m["xent"]
+
+    tot = 0.0
+    for i in range(steps):
+        batch = sample_batch(dc, start_step + i)
+        tot += float(xent(params, batch))
+    return float(np.exp(tot / steps))

@@ -1,0 +1,90 @@
+"""Train-step construction: grads -> (optional compression) -> AdamW update.
+
+Supports microbatched gradient accumulation (sequential scan over
+microbatches -- the standard memory lever when the per-device batch does not
+fit) and int8 error-feedback gradient compression.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.models.opts import DEFAULT_OPTS, ModelOpts
+from repro.optim import AdamW, AdamWState
+from repro.optim.compression import compress_grads, init_error_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    err: Optional[Any]          # compression error-feedback state (or None)
+
+
+def init_state(key, cfg: ModelConfig, optimizer: AdamW, *,
+               compression: bool = False) -> TrainState:
+    params = models.init_params(key, cfg)
+    return TrainState(
+        params=params,
+        opt=optimizer.init(params),
+        err=init_error_state(params) if compression else None,
+    )
+
+
+def make_train_step(cfg: ModelConfig, optimizer: AdamW, *,
+                    opts: ModelOpts = DEFAULT_OPTS, mesh=None,
+                    microbatches: int = 1, compression: bool = False):
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def loss_of(params, batch):
+        return models.loss_fn(params, cfg, batch, mesh=mesh, opts=opts)
+
+    def grads_of(params, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc_l, acc_g = carry
+            (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mb)
+            acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 acc_g, grads)
+            return (acc_l + loss, acc_g), None
+
+        (loss_sum, gsum), _ = jax.lax.scan(body, (jnp.zeros(()), zero_g), micro)
+        grads = jax.tree.map(lambda g: (g / microbatches), gsum)
+        loss = loss_sum / microbatches
+        return loss, {"xent": loss, "aux": jnp.zeros(())}, grads
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, metrics, grads = grads_of(state.params, batch)
+        err = state.err
+        if compression:
+            grads, err = compress_grads(grads, err)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        updates, opt = optimizer.update(grads, state.opt, state.params)
+        params = optimizer.apply_updates(state.params, updates)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = optimizer.schedule(opt.step)
+        return TrainState(params, opt, err), metrics
+
+    return step

@@ -1,0 +1,114 @@
+"""flash_decode kernel: sweeps + properties vs oracle, and vs the model path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode_pallas
+
+
+def _setup(b, hq, hkv, s, hd, filled, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32).astype(dtype)
+    pos = np.full((b, s), -1, np.int32)
+    pos[:, :filled] = np.arange(filled)
+    cur = np.full((b,), filled - 1, np.int32)
+    return q, k, v, jnp.asarray(pos), jnp.asarray(cur)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("b,hq,hkv,s,hd,filled", [
+        (1, 4, 1, 64, 32, 40),      # MQA, partially filled cache
+        (2, 8, 2, 128, 64, 128),    # GQA, full cache
+        (2, 4, 4, 96, 32, 17),      # MHA, small fill
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep_matches_oracle(self, b, hq, hkv, s, hd, filled, dtype):
+        q, k, v, pos, cur = _setup(b, hq, hkv, s, hd, filled, dtype)
+        out = flash_decode_pallas(q, k, v, pos, cur, block_k=32,
+                                  interpret=True)
+        exp = ref.flash_decode_ref(q, k, v, pos, cur)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32), **TOL[dtype])
+
+    @pytest.mark.parametrize("window", [16, 50])
+    def test_sliding_window(self, window):
+        q, k, v, pos, cur = _setup(2, 4, 2, 128, 32, 100)
+        out = flash_decode_pallas(q, k, v, pos, cur, window=window,
+                                  block_k=32, interpret=True)
+        exp = ref.flash_decode_ref(q, k, v, pos, cur, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_masked_slots_have_no_influence(self):
+        """Garbage beyond cur_pos / in empty slots must not change output."""
+        q, k, v, pos, cur = _setup(1, 2, 1, 64, 32, 20)
+        out1 = flash_decode_pallas(q, k, v, pos, cur, block_k=16,
+                                   interpret=True)
+        k2 = k.at[:, 20:].set(999.0)
+        v2 = v.at[:, 20:].set(-999.0)
+        out2 = flash_decode_pallas(q, k2, v2, pos, cur, block_k=16,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_ring_buffer_order_irrelevant(self):
+        """Slot order must not matter (only stored positions do)."""
+        q, k, v, pos, cur = _setup(1, 2, 1, 64, 32, 64)
+        perm = np.random.default_rng(0).permutation(64)
+        out1 = flash_decode_pallas(q, k, v, pos, cur, block_k=16,
+                                   interpret=True)
+        out2 = flash_decode_pallas(q, k[:, perm], v[:, perm], pos[:, perm],
+                                   cur, block_k=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_block_size_invariance(self):
+        q, k, v, pos, cur = _setup(2, 4, 2, 128, 64, 90)
+        outs = [np.asarray(flash_decode_pallas(q, k, v, pos, cur, block_k=bk,
+                                               interpret=True))
+                for bk in (16, 64, 128)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+    def test_full_model_decode_with_kernel(self):
+        """ModelOpts(use_flash_decode=True) == einsum decode end to end."""
+        from repro import models
+        from repro.configs import get_config
+        from repro.models.opts import ModelOpts
+        cfg = get_config("h2o-danube-1.8b").reduced().with_(
+            dtype="float32", num_layers=2)
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        B, plen = 2, 12
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, plen), 0,
+                                    cfg.vocab_size)
+        caches = models.init_caches(cfg, B, 64)
+        logits, caches = models.prefill_fn(params, cfg, {"tokens": tokens},
+                                           caches)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = jnp.full((B,), plen, jnp.int32)
+        l0, _ = models.decode_fn(params, cfg, nxt, pos, caches)
+        l1, _ = models.decode_fn(params, cfg, nxt, pos, caches,
+                                 opts=ModelOpts(use_flash_decode=True))
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_matches_model_decode_attention(self):
+        """Kernel == the model's _sdpa decode path on the same cache."""
+        from repro.models.attention import _mask_bias, _sdpa
+        q, k, v, pos, cur = _setup(2, 8, 2, 64, 32, 50)
+        out = flash_decode_pallas(q, k, v, pos, cur, block_k=16,
+                                  interpret=True)
+        bias = _mask_bias(cur[:, None], pos, None, True)
+        exp = _sdpa(q[:, None].transpose(0, 1, 2, 3).reshape(2, 1, 8, 32),
+                    k, v, bias, 1.0 / (32 ** 0.5))[:, 0]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-5, atol=2e-5)

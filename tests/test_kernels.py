@@ -1,0 +1,218 @@
+"""Pallas kernel validation: shape/dtype sweeps + properties vs pure-jnp oracles.
+
+Kernels execute with interpret=True on CPU (assignment requirement); the same
+pallas_call lowers to Mosaic on TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.moe_ffn import moe_ffn_pallas
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# moe_ffn
+# --------------------------------------------------------------------------- #
+
+
+class TestMoeFFN:
+    @pytest.mark.parametrize("e,c,d,f", [
+        (1, 8, 64, 32),
+        (4, 64, 128, 96),
+        (8, 16, 256, 64),
+        (2, 128, 128, 256),   # f > block_f -> multi f-step accumulation
+        (3, 20, 96, 48),      # non-power-of-two c
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep_matches_oracle(self, e, c, d, f, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(e * 100 + c), 3)
+        xe = _rand(ks[0], (e, c, d), dtype)
+        w1 = _rand(ks[1], (e, d, 2 * f), dtype, 0.05)
+        w2 = _rand(ks[2], (e, f, d), dtype, 0.05)
+        out = moe_ffn_pallas(xe, w1, w2, block_c=16, block_f=32, interpret=True)
+        exp = ref.moe_ffn_ref(xe, w1, w2)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32), **TOL[dtype])
+
+    def test_block_size_invariance(self):
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        e, c, d, f = 2, 64, 128, 128
+        xe = _rand(ks[0], (e, c, d), jnp.float32)
+        w1 = _rand(ks[1], (e, d, 2 * f), jnp.float32, 0.05)
+        w2 = _rand(ks[2], (e, f, d), jnp.float32, 0.05)
+        outs = [np.asarray(moe_ffn_pallas(xe, w1, w2, block_c=bc, block_f=bf,
+                                          interpret=True))
+                for bc, bf in [(8, 16), (64, 128), (16, 64)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+    def test_expert_permutation_equivariance(self):
+        """Permuting experts permutes outputs (property of groupedness)."""
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        e, c, d, f = 4, 16, 64, 32
+        xe = _rand(ks[0], (e, c, d), jnp.float32)
+        w1 = _rand(ks[1], (e, d, 2 * f), jnp.float32, 0.05)
+        w2 = _rand(ks[2], (e, f, d), jnp.float32, 0.05)
+        perm = jnp.array([2, 0, 3, 1])
+        out = moe_ffn_pallas(xe, w1, w2, interpret=True)
+        out_p = moe_ffn_pallas(xe[perm], w1[perm], w2[perm], interpret=True)
+        np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_zero_input_gives_zero(self):
+        e, c, d, f = 2, 8, 64, 32
+        xe = jnp.zeros((e, c, d))
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        w1 = _rand(ks[0], (e, d, 2 * f), jnp.float32)
+        w2 = _rand(ks[1], (e, f, d), jnp.float32)
+        out = moe_ffn_pallas(xe, w1, w2, interpret=True)
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 3))
+    def test_property_random_shapes(self, e, c8, f32):
+        c, d, f = c8 * 8, 64, f32 * 32
+        ks = jax.random.split(jax.random.PRNGKey(e * 31 + c + f), 3)
+        xe = _rand(ks[0], (e, c, d), jnp.float32)
+        w1 = _rand(ks[1], (e, d, 2 * f), jnp.float32, 0.05)
+        w2 = _rand(ks[2], (e, f, d), jnp.float32, 0.05)
+        out = moe_ffn_pallas(xe, w1, w2, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.moe_ffn_ref(xe, w1, w2)),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,s,hd", [
+        (1, 1, 1, 64, 32),
+        (2, 4, 2, 128, 64),
+        (1, 8, 1, 256, 64),   # strong GQA (MQA)
+        (2, 4, 4, 96, 32),    # MHA, non-power-of-two seq
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep_matches_oracle(self, b, hq, hkv, s, hd, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(s + hq), 3)
+        q = _rand(ks[0], (b, hq, s, hd), dtype)
+        k = _rand(ks[1], (b, hkv, s, hd), dtype)
+        v = _rand(ks[2], (b, hkv, s, hd), dtype)
+        out = flash_attention_pallas(q, k, v, block_q=32, block_k=32,
+                                     interpret=True)
+        exp = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32), **TOL[dtype])
+
+    @pytest.mark.parametrize("window", [16, 64, 100])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(jax.random.PRNGKey(window), 3)
+        q = _rand(ks[0], (2, 2, 128, 32), jnp.float32)
+        k = _rand(ks[1], (2, 2, 128, 32), jnp.float32)
+        v = _rand(ks[2], (2, 2, 128, 32), jnp.float32)
+        out = flash_attention_pallas(q, k, v, window=window, block_q=32,
+                                     block_k=32, interpret=True)
+        exp = ref.flash_attention_ref(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_block_size_invariance(self):
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = _rand(ks[0], (1, 2, 128, 64), jnp.float32)
+        k = _rand(ks[1], (1, 2, 128, 64), jnp.float32)
+        v = _rand(ks[2], (1, 2, 128, 64), jnp.float32)
+        outs = [np.asarray(flash_attention_pallas(q, k, v, block_q=bq,
+                                                  block_k=bk, interpret=True))
+                for bq, bk in [(32, 32), (128, 64), (64, 128)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+    def test_causality(self):
+        """Changing future keys must not change earlier outputs."""
+        ks = jax.random.split(jax.random.PRNGKey(9), 4)
+        q = _rand(ks[0], (1, 1, 64, 32), jnp.float32)
+        k = _rand(ks[1], (1, 1, 64, 32), jnp.float32)
+        v = _rand(ks[2], (1, 1, 64, 32), jnp.float32)
+        out1 = flash_attention_pallas(q, k, v, block_q=16, block_k=16,
+                                      interpret=True)
+        k2 = k.at[:, :, 32:].set(_rand(ks[3], (1, 1, 32, 32), jnp.float32))
+        out2 = flash_attention_pallas(q, k2, v, block_q=16, block_k=16,
+                                      interpret=True)
+        np.testing.assert_allclose(np.asarray(out1[:, :, :32]),
+                                   np.asarray(out2[:, :, :32]),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_rows_are_convex_combinations(self):
+        """softmax property: each output row lies in conv hull of v rows."""
+        ks = jax.random.split(jax.random.PRNGKey(11), 3)
+        q = _rand(ks[0], (1, 1, 64, 16), jnp.float32)
+        k = _rand(ks[1], (1, 1, 64, 16), jnp.float32)
+        v = _rand(ks[2], (1, 1, 64, 16), jnp.float32)
+        out = np.asarray(flash_attention_pallas(q, k, v, block_q=16,
+                                                block_k=16, interpret=True))
+        vmin, vmax = np.asarray(v).min(), np.asarray(v).max()
+        assert out.min() >= vmin - 1e-4 and out.max() <= vmax + 1e-4
+
+    def test_model_layout_adapter(self):
+        ks = jax.random.split(jax.random.PRNGKey(13), 3)
+        q = _rand(ks[0], (2, 64, 4, 32), jnp.float32)   # [B,S,H,hd]
+        k = _rand(ks[1], (2, 64, 2, 32), jnp.float32)
+        v = _rand(ks[2], (2, 64, 2, 32), jnp.float32)
+        out = ops.flash_attention(q, k, v)
+        exp = ref.flash_attention_ref(q.transpose(0, 2, 1, 3),
+                                      k.transpose(0, 2, 1, 3),
+                                      v.transpose(0, 2, 1, 3))
+        np.testing.assert_allclose(np.asarray(out.transpose(0, 2, 1, 3)),
+                                   np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# kernels wired into the model
+# --------------------------------------------------------------------------- #
+
+
+class TestModelIntegration:
+    def test_moe_layer_with_kernel_matches_einsum(self):
+        from repro.configs import get_config
+        from repro import models
+        from repro.models.moe import moe_dense
+        from repro.core import iter_moe_layer_params
+        cfg = get_config("mixtral-8x7b").reduced().with_(dtype="float32")
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        _, mp = next(iter_moe_layer_params(params, cfg))
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+        y0, _ = moe_dense(mp, cfg, x, cfg.moe_top_k, use_kernel=False)
+        y1, _ = moe_dense(mp, cfg, x, cfg.moe_top_k, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("kv_heads", [4, 2, 1])  # MHA, GQA, MQA
+    def test_attention_with_flash_matches_einsum(self, kv_heads):
+        """Guards the GQA head-mapping convention (q head h -> kv h // g)
+        shared by the einsum path, the flash kernels and the seq-shard
+        decode path."""
+        from repro.configs import get_config
+        from repro import models
+        from repro.models.opts import ModelOpts
+        cfg = get_config("h2o-danube-1.8b").reduced().with_(
+            dtype="float32", num_kv_heads=kv_heads)
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        batch = models.make_train_batch(cfg, jax.random.PRNGKey(1), 2, 64)
+        l0, _ = models.loss_fn(params, cfg, batch)
+        l1, _ = models.loss_fn(params, cfg, batch,
+                               opts=ModelOpts(use_flash=True))
+        np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4)

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests on reduced configs (assignment requirement).
+
+Each assigned arch (and the paper's own MoEs) instantiates a REDUCED config of
+the same family and runs one forward/train step on CPU, asserting output
+shapes and absence of NaNs.  Full configs are exercised only via the dry-run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import ASSIGNED, PAPER_MOES, get_config
+
+ALL_ARCHS = ASSIGNED + PAPER_MOES
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step_smoke(name, key):
+    cfg = get_config(name).reduced()
+    params = models.init_params(key, cfg)
+    batch = models.make_train_batch(cfg, key, 2, 32)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: models.loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+    # every parameter receives a finite gradient
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat), name
+    # at least one grad is nonzero (model is actually wired in)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in flat), name
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_consistency(name, key):
+    """decode(t) after prefill(0..t-1) must match full-forward logits.
+
+    MoE configs run dropless (high capacity factor): equivalence is only
+    promised modulo capacity drops, which differ across token counts.
+    """
+    cfg = get_config(name).reduced()
+    if cfg.is_moe:
+        cfg = cfg.with_(moe_capacity_factor=float(cfg.num_experts))
+    params = models.init_params(key, cfg)
+    b, s = 2, 16
+    batch = models.make_train_batch(cfg, key, b, s)
+    tokens = batch["tokens"]
+
+    caches = models.init_caches(cfg, b, max_len=64)
+    pre_batch = {k: v for k, v in batch.items() if k != "targets" and k != "mask"}
+    pre_batch["tokens"] = tokens[:, :-1]
+    if "frames" in batch:
+        pre_batch["frames"] = batch["frames"]
+    logits_pre, caches = models.prefill_fn(params, cfg, pre_batch, caches)
+
+    plen = batch.get("prefix_embeds", jnp.zeros((b, 0, 1))).shape[1]
+    pos = jnp.full((b,), s - 1 + plen, jnp.int32)
+    logits_dec, _ = models.decode_fn(params, cfg, tokens[:, -1], pos, caches)
+
+    # reference: full forward in train mode, take position s-2 (predicting s-1)
+    from repro.models import transformer as tf
+    from repro.models import encdec as ed
+    if cfg.is_encoder_decoder:
+        enc = ed.encode(params, cfg, batch["frames"])
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        full, _ = ed._decoder(params, cfg, tokens, positions, "train", None,
+                              enc, models.DEFAULT_OPTS)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s + plen)[None], (b, s + plen))
+        hidden, _, _ = tf.forward(params, cfg, tokens, positions, mode="train",
+                                  prefix_embeds=batch.get("prefix_embeds"))
+        full = tf.lm_logits(params, cfg, hidden[:, plen:])
+
+    np.testing.assert_allclose(np.asarray(logits_pre), np.asarray(full[:, -2]),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_lexi_plan_changes_pattern():
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    n = cfg.num_moe_layers
+    plan = tuple(1 + (i % cfg.moe_top_k) for i in range(n))
+    cfg2 = cfg.with_lexi_plan(plan)
+    ks = [b.moe_top_k for b in cfg2.pattern() if b.kind == "attn_moe"]
+    assert tuple(ks) == plan
+
+
+def test_lexi_plan_still_runs():
+    key = jax.random.PRNGKey(1)
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    n = cfg.num_moe_layers
+    cfg2 = cfg.with_lexi_plan(tuple(1 + (i % 2) for i in range(n)))
+    params = models.init_params(key, cfg2)
+    batch = models.make_train_batch(cfg2, key, 2, 32)
+    loss, _ = models.loss_fn(params, cfg2, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_param_count_sane():
+    # full-size analytic counts should be near the models' nameplates
+    approx = {
+        "olmo-1b": (1.0e9, 1.5e9),
+        "qwen3-32b": (30e9, 35e9),
+        "qwen3-moe-235b-a22b": (220e9, 245e9),
+        "mamba2-780m": (0.7e9, 0.9e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, f"{name}: {n}"
+
+
+def test_nonparam_ln_has_no_scale():
+    cfg = get_config("olmo-1b").reduced()
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+    assert params["final_norm"] == {}
+
+
+def test_sliding_window_masks_far_tokens():
+    """With window W, token attends only to the last W positions."""
+    from repro.models.attention import _mask_bias
+    q_pos = jnp.array([[10]])
+    kv_pos = jnp.arange(12)[None]
+    bias = _mask_bias(q_pos, kv_pos, window=4, causal=True)
+    visible = np.asarray(bias[0, 0, 0] == 0.0)
+    assert visible.tolist() == [False] * 7 + [True] * 4 + [False]

@@ -1,0 +1,148 @@
+"""Hypothesis property tests for system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ASSIGNED, get_config
+from repro.models.common import apply_norm, apply_rope
+from repro.models.moe import capacity, _slot_positions
+
+
+class TestRoPE:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 1000), st.integers(0, 500))
+    def test_attention_scores_shift_invariant(self, base, shift):
+        """<rope(q,i), rope(k,j)> depends only on i - j."""
+        key = jax.random.PRNGKey(7)
+        q = jax.random.normal(key, (1, 1, 1, 64))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 64))
+        def score(i, j):
+            qr = apply_rope(q, jnp.array([[i]]), 10_000.0)
+            kr = apply_rope(k, jnp.array([[j]]), 10_000.0)
+            return float(jnp.sum(qr * kr))
+        s1 = score(base + 5, base)
+        s2 = score(base + shift + 5, base + shift)
+        assert abs(s1 - s2) < 1e-3 * max(abs(s1), 1.0)
+
+    def test_rope_preserves_norm(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (2, 8, 4, 32))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        y = apply_rope(x, pos, 10_000.0)
+        np.testing.assert_allclose(
+            np.asarray(jnp.linalg.norm(x, axis=-1)),
+            np.asarray(jnp.linalg.norm(y, axis=-1)), rtol=1e-5)
+
+
+class TestNorms:
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(0.1, 100.0))
+    def test_rmsnorm_scale_invariant(self, scale):
+        cfg = get_config("qwen3-32b").reduced().with_(dtype="float32")
+        params = {"scale": jnp.ones((cfg.d_model,))}
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, cfg.d_model))
+        y1 = apply_norm(params, cfg, x)
+        y2 = apply_norm(params, cfg, x * scale)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_nonparam_ln_zero_mean_unit_var(self):
+        cfg = get_config("olmo-1b").reduced().with_(dtype="float32")
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model)) * 7 + 3
+        y = np.asarray(apply_norm({}, cfg, x))
+        np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(y.var(-1), 1.0, rtol=1e-3)
+
+
+class TestMoEInvariants:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 4096), st.integers(1, 8), st.integers(2, 128))
+    def test_capacity_bounds(self, t, k, e):
+        c = capacity(t, k, e, 1.25)
+        assert c >= max(4, t * k // e)      # never below fair share
+        assert c % 4 == 0                   # lane alignment
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_slot_positions_unique_per_expert(self, seed):
+        rng = np.random.default_rng(seed)
+        idx = jnp.asarray(rng.integers(0, 8, size=(32, 2)))
+        pos, keep = _slot_positions(idx, 8, cap=64)
+        pos, keep, idx = map(np.asarray, (pos, keep, idx))
+        slots = [(int(e), int(p)) for e, p, kp in
+                 zip(idx.ravel(), pos.ravel(), keep.ravel()) if kp]
+        assert len(slots) == len(set(slots)), "slot collision"
+
+    def test_dropless_moe_is_permutation_equivariant_in_tokens(self):
+        from repro import models
+        from repro.core import iter_moe_layer_params
+        from repro.models.moe import moe_dense
+        cfg = get_config("mixtral-8x7b").reduced().with_(
+            dtype="float32", moe_capacity_factor=8.0)
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        _, mp = next(iter_moe_layer_params(params, cfg))
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+        perm = np.random.default_rng(0).permutation(32)
+        y1, _ = moe_dense(mp, cfg, x, cfg.moe_top_k)
+        y2, _ = moe_dense(mp, cfg, x[perm], cfg.moe_top_k)
+        np.testing.assert_allclose(np.asarray(y1[perm]), np.asarray(y2),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestShardingInvariants:
+    def test_all_sharded_dims_divisible_all_archs(self):
+        """Every spec the rules emit must be executable on the prod mesh."""
+        import re
+        from repro import models
+        from repro.sharding import rules
+        from jax.sharding import PartitionSpec as P
+
+        class FakeMesh:  # avoids touching jax device state
+            axis_names = ("data", "model")
+            class devices:
+                shape = (16, 16)
+                size = 256
+
+        mesh = FakeMesh()
+        for name in ASSIGNED:
+            cfg = get_config(name)
+            abs_p = models.abstract_params(cfg)
+            specs = rules.param_specs(abs_p, cfg, mesh, fsdp=True)
+            for leaf, spec in zip(
+                    jax.tree.leaves(abs_p),
+                    jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))):
+                entries = list(spec) + [None] * (leaf.ndim - len(spec))
+                for dim, e in zip(leaf.shape, entries):
+                    if e is None:
+                        continue
+                    axes = e if isinstance(e, tuple) else (e,)
+                    total = 1
+                    for a in axes:
+                        total *= dict(zip(mesh.axis_names,
+                                          mesh.devices.shape))[a]
+                    assert dim % total == 0, (name, leaf.shape, spec)
+
+
+class TestOptimizer:
+    def test_adamw_descends_quadratic(self):
+        from repro.optim import AdamW
+        opt = AdamW(peak_lr=0.1, warmup_steps=1, total_steps=200,
+                    weight_decay=0.0)
+        params = {"w": jnp.full((4,), 5.0)}
+        state = opt.init(params)
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}
+            updates, state = opt.update(grads, state, params)
+            params = opt.apply_updates(params, updates)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+    def test_schedule_shape(self):
+        from repro.optim import AdamW
+        opt = AdamW(peak_lr=1e-3, warmup_steps=10, total_steps=100)
+        lrs = [float(opt.schedule(jnp.asarray(s))) for s in range(0, 101, 5)]
+        assert lrs[0] < lrs[2]                       # warmup rises
+        assert max(lrs) <= 1e-3 + 1e-9               # peak respected
+        assert lrs[-1] < lrs[4]                      # cosine decays
+        assert lrs[-1] >= 1e-4 - 1e-9                # min_lr floor

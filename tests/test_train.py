@@ -1,0 +1,201 @@
+"""Training substrate: convergence, fault tolerance, compression, data."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, Pipeline, sample_batch
+from repro.optim import AdamW
+from repro.optim.compression import compress_grads, init_error_state
+from repro.training import eval_perplexity, init_state, train
+from repro.training.step import make_train_step
+
+
+def tiny_cfg():
+    return get_config("olmo-1b").reduced().with_(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, vocab_pad_multiple=16)
+
+
+def tiny_dc(cfg, batch=8, seq=32, seed=0):
+    return DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      global_batch=batch, seed=seed)
+
+
+# --------------------------------------------------------------------------- #
+# data
+# --------------------------------------------------------------------------- #
+
+
+class TestData:
+    def test_deterministic(self):
+        dc = tiny_dc(tiny_cfg())
+        b1 = sample_batch(dc, 7)
+        b2 = sample_batch(dc, 7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_steps_differ(self):
+        dc = tiny_dc(tiny_cfg())
+        assert not np.array_equal(sample_batch(dc, 0)["tokens"],
+                                  sample_batch(dc, 1)["tokens"])
+
+    def test_host_sharding_disjoint_and_shaped(self):
+        cfg = tiny_cfg()
+        d0 = DataConfig(cfg.vocab_size, 32, 8, num_hosts=2, host_id=0)
+        d1 = DataConfig(cfg.vocab_size, 32, 8, num_hosts=2, host_id=1)
+        b0, b1 = sample_batch(d0, 3), sample_batch(d1, 3)
+        assert b0["tokens"].shape == (4, 32)
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+    def test_learnable_structure(self):
+        """The successor rule must dominate transitions (signal exists)."""
+        dc = tiny_dc(tiny_cfg(), batch=64, seq=64)
+        b = sample_batch(dc, 0)
+        seq = np.concatenate([b["tokens"], b["targets"][:, -1:]], axis=1)
+        succ = (seq[:, :-1] * 31 + 17) % dc.vocab_size
+        frac = float((seq[:, 1:] == succ).mean())
+        assert 0.5 < frac < 0.9
+
+    def test_pipeline_prefetch_and_resume(self):
+        dc = tiny_dc(tiny_cfg())
+        with Pipeline(dc, start_step=5) as p:
+            first = next(p)
+        np.testing.assert_array_equal(first["tokens"],
+                                      sample_batch(dc, 5)["tokens"])
+
+
+# --------------------------------------------------------------------------- #
+# training convergence
+# --------------------------------------------------------------------------- #
+
+
+class TestTraining:
+    def test_loss_decreases(self, tmp_path):
+        cfg = tiny_cfg()
+        res = train(cfg, tiny_dc(cfg), total_steps=30,
+                    optimizer=AdamW(peak_lr=1e-3, total_steps=30,
+                                    warmup_steps=3))
+        first = np.mean(res.losses[:5])
+        last = np.mean(res.losses[-5:])
+        assert last < first - 0.3, (first, last)
+
+    def test_microbatch_equivalence(self):
+        """k microbatches == full batch (up to fp tolerance)."""
+        cfg = tiny_cfg()
+        opt = AdamW(peak_lr=1e-3, total_steps=10)
+        s1 = init_state(jax.random.PRNGKey(0), cfg, opt)
+        s2 = init_state(jax.random.PRNGKey(0), cfg, opt)
+        batch = sample_batch(tiny_dc(cfg), 0)
+        f1 = jax.jit(make_train_step(cfg, opt, microbatches=1))
+        f4 = jax.jit(make_train_step(cfg, opt, microbatches=4))
+        s1, m1 = f1(s1, batch)
+        s2, m4 = f4(s2, batch)
+        for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-2, atol=2e-4)
+
+    def test_eval_perplexity_improves(self):
+        cfg = tiny_cfg()
+        dc = tiny_dc(cfg)
+        opt = AdamW(peak_lr=1e-3, total_steps=40, warmup_steps=4)
+        s0 = init_state(jax.random.PRNGKey(0), cfg, opt)
+        ppl0 = eval_perplexity(s0, cfg, dc, steps=3)
+        res = train(cfg, dc, total_steps=40, optimizer=opt)
+        ppl1 = eval_perplexity(res.state, cfg, dc, steps=3)
+        assert ppl1 < ppl0 * 0.8
+
+
+# --------------------------------------------------------------------------- #
+# fault tolerance
+# --------------------------------------------------------------------------- #
+
+
+class TestFaultTolerance:
+    def test_crash_resume_bit_exact(self, tmp_path):
+        """kill at step 12, resume, result identical to uninterrupted run."""
+        cfg = tiny_cfg()
+        dc = tiny_dc(cfg)
+        opt = AdamW(peak_lr=1e-3, total_steps=20)
+        d_crash = str(tmp_path / "crash")
+
+        with pytest.raises(RuntimeError, match="injected crash"):
+            train(cfg, dc, total_steps=20, optimizer=opt, ckpt_dir=d_crash,
+                  ckpt_every=5, ckpt_async=False, crash_at_step=12)
+        res_resumed = train(cfg, dc, total_steps=20, optimizer=opt,
+                            ckpt_dir=d_crash, ckpt_every=5, ckpt_async=False)
+        assert res_resumed.resumed_from == 10   # last ckpt before the crash
+
+        res_clean = train(cfg, dc, total_steps=20, optimizer=opt)
+        for a, b in zip(jax.tree.leaves(res_clean.state.params),
+                        jax.tree.leaves(res_resumed.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_checkpoint_atomic_keep_n(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+        tree = {"w": jnp.arange(8.0)}
+        for s in (5, 10, 15):
+            mgr.save(s, tree)
+        assert mgr.all_steps() == [10, 15]
+        restored, meta = mgr.restore(tree, step=15)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+        assert meta["step"] == 15
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path / "ck"))
+        mgr.save(1, {"w": jnp.ones(4)}, blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_restore_shape_mismatch_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path / "ck"))
+        mgr.save(1, {"w": jnp.ones(4)})
+        with pytest.raises(ValueError, match="shape mismatch"):
+            mgr.restore({"w": jnp.ones(5)})
+
+    def test_tmp_dir_crash_is_invisible(self, tmp_path):
+        """A leftover .tmp dir (crash mid-write) must not be restorable."""
+        mgr = CheckpointManager(str(tmp_path / "ck"))
+        mgr.save(3, {"w": jnp.ones(2)})
+        os.makedirs(str(tmp_path / "ck" / "step_00000009.tmp"))
+        assert mgr.latest_step() == 3
+
+
+# --------------------------------------------------------------------------- #
+# gradient compression
+# --------------------------------------------------------------------------- #
+
+
+class TestCompression:
+    def test_quantization_bounded_error(self):
+        g = {"w": jnp.linspace(-1, 1, 256)}
+        e = init_error_state(g)
+        deq, err = compress_grads(g, e)
+        assert float(jnp.max(jnp.abs(deq["w"] - g["w"]))) < 1.0 / 127 + 1e-6
+
+    def test_error_feedback_carries_residual(self):
+        g = {"w": jnp.full((16,), 1e-4)}   # below one quantization step
+        e = init_error_state(g)
+        deq1, e = compress_grads(g, e)
+        # keep feeding the same tiny grad: error accumulates until it fires
+        fired = False
+        for _ in range(2000):
+            deq, e = compress_grads(g, e)
+            if float(jnp.max(jnp.abs(deq["w"]))) > 0:
+                fired = True
+                break
+        assert fired, "error feedback never released the residual"
+
+    def test_training_with_compression_converges(self):
+        cfg = tiny_cfg()
+        res = train(cfg, tiny_dc(cfg), total_steps=30,
+                    optimizer=AdamW(peak_lr=1e-3, total_steps=30,
+                                    warmup_steps=3), compression=True)
+        assert np.mean(res.losses[-5:]) < np.mean(res.losses[:5]) - 0.3
