@@ -34,6 +34,22 @@ def run(csv: CSV, *, fast: bool = False) -> None:
             f"vmem_tile_mib={vmem:.1f}")
     csv.add("kernels/moe_ffn_jnp_ref", us_r, f"flops={flops:.3g}")
 
+    # moe_gmm: same expert workload on the ragged sorted layout (all tiles
+    # occupied -> same useful FLOPs as moe_ffn above)
+    bm = 32
+    n_tiles = e * c // bm
+    xs = xe.reshape(e * c, d)
+    te = jnp.repeat(jnp.arange(e, dtype=jnp.int32), c // bm)
+    tv = jnp.ones((n_tiles,), jnp.int32)
+    us_g = time_us(lambda: ops.moe_gmm(xs, w1, w2, te, tv, block_m=bm),
+                   iters=3)
+    sizes = jnp.full((e,), c, jnp.int32)
+    us_gr = time_us(jax.jit(lambda a, b_, c_: ref.moe_gmm_ref(a, b_, c_, sizes)),
+                    xs, w1, w2, iters=3)
+    csv.add("kernels/moe_gmm_pallas_interp", us_g,
+            f"flops={flops:.3g};v5e_mxu_bound_us={flops / V5E_PEAK * 1e6:.2f}")
+    csv.add("kernels/moe_gmm_jnp_ref", us_gr, f"flops={flops:.3g}")
+
     # flash attention
     b, hq, hkv, s, hd = (1, 2, 1, 256, 64) if fast else (2, 4, 2, 512, 64)
     q = jax.random.normal(ks[3], (b, hq, s, hd), jnp.float32)

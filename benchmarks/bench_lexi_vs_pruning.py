@@ -43,15 +43,24 @@ def run(csv: CSV, *, fast: bool = False) -> None:
     from repro.data import sample_batch
     batch = sample_batch(dc, 99_999)
 
-    def report(name, cfg_, params_, extra=""):
+    def report(name, cfg_, params_, extra="", gmm=False):
         us = _throughput_us(cfg_, params_, batch)
         ppl = eval_perplexity(params_, cfg_, dc, steps=2 if fast else 6)
         csv.add(f"fig4/{name}", us, f"ppl={ppl:.3f};{extra}")
+        if gmm:
+            # same plan on the sort-based dropless production path; ppl is
+            # re-measured there too (capacity drops inflate the dense-path
+            # number for reduced-k plans -- DESIGN.md §1)
+            cfg_g = cfg_.with_(moe_impl="gmm")
+            us_g = _throughput_us(cfg_g, params_, batch)
+            ppl_g = eval_perplexity(params_, cfg_g, dc,
+                                    steps=2 if fast else 6)
+            csv.add(f"fig4/{name}~gmm", us_g, f"ppl={ppl_g:.3f};{extra}")
         return us, ppl
 
     base_us, base_ppl = report(
         f"baseline_top{cfg.moe_top_k}", cfg, params,
-        f"active_frac=1.00")
+        f"active_frac=1.00", gmm=True)
 
     # one profiling pass feeds every LExI budget
     table = profile_sensitivity(params, cfg, n_iter=4 if fast else 12,
@@ -63,12 +72,13 @@ def run(csv: CSV, *, fast: bool = False) -> None:
             plan = optimize(params, cfg, b, method=method, table=table)
             cfg_l, params_l = apply_plan_params(params, cfg, plan)
             report(f"lexi_{method}_B{b}", cfg_l, params_l,
-                   f"active_frac={plan.active_fraction():.3f};plan={plan.plan}")
+                   f"active_frac={plan.active_fraction():.3f};plan={plan.plan}",
+                   gmm=True)
 
     for k in range(1, cfg.moe_top_k):
         cfg_u = cfg.with_lexi_plan((k,) * n)
         report(f"uniform_top{k}", cfg_u, params,
-               f"active_frac={k / cfg.moe_top_k:.3f}")
+               f"active_frac={k / cfg.moe_top_k:.3f}", gmm=True)
 
     for frac in (0.25, 0.5):
         p2, cfg2 = inter_prune(params, cfg, frac)

@@ -1,0 +1,55 @@
+"""Dispatch-impl throughput matrix: dense vs gmm across top-k.
+
+Records the perf trajectory of the dispatch refactor: tokens/s of one jitted
+MoE layer under the capacity-buffer path (``dense``) and the sort-based
+dropless path (``gmm``) at several top-k values, written to
+``BENCH_moe_dispatch.json`` so successive PRs can diff the curve.  The
+layer/workload is shared with ``bench_moe_topk`` (fig2) so the curves stay
+comparable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from benchmarks.bench_moe_topk import IMPL_FNS, layer_flops_per_token, \
+    layer_setup
+from benchmarks.common import CSV, time_us
+
+OUT_PATH = os.environ.get("BENCH_MOE_DISPATCH_OUT", "BENCH_moe_dispatch.json")
+
+
+def run(csv: CSV, *, fast: bool = False, tokens: int = 0,
+        out_path: str = OUT_PATH) -> None:
+    tokens = tokens or (512 if fast else 2048)
+    cfg, _, mp, x = layer_setup(tokens)
+
+    entries = []
+    for impl in ("dense", "gmm"):
+        layer_fn = IMPL_FNS[impl]
+        for k in (1, 2, 4, 8):
+            fn = jax.jit(lambda p, xx, kk=k, f=layer_fn: f(p, cfg, xx, kk)[0])
+            us = time_us(fn, mp, x, iters=3 if fast else 10)
+            flops = layer_flops_per_token(cfg, k)
+            tok_s = tokens / us * 1e6
+            csv.add(f"dispatch/{impl}_top{k}", us,
+                    f"tok_per_s={tok_s:.0f};flops_per_tok={flops:.3g}")
+            entries.append({"impl": impl, "top_k": k, "tokens": tokens,
+                            "us_per_call": round(us, 1),
+                            "tokens_per_s": round(tok_s, 1),
+                            "flops_per_tok": flops})
+
+    with open(out_path, "w") as f:
+        json.dump({"bench": "moe_dispatch", "d_model": cfg.d_model,
+                   "num_experts": cfg.num_experts, "moe_d_ff": cfg.moe_d_ff,
+                   "entries": entries}, f, indent=1)
+    print(f"# wrote {out_path}", flush=True)
+
+
+if __name__ == "__main__":
+    c = CSV()
+    c.header()
+    run(c)

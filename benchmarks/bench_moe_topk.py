@@ -6,6 +6,10 @@ routed top-k (and hence total expert work ~ T*k) is unchanged -- surviving
 experts just absorb more tokens; *intra* pruning shrinks each expert; only
 reducing top-k (LExI's lever) cuts work proportionally.
 
+``--impl gmm`` measures the same sweep on the sort-based dropless dispatch
+path (the production pattern), where dispatch+compute cost genuinely scales
+with per-layer k instead of with the padded capacity buffer.
+
 Measured as wall-time of the jitted MoE layer on CPU; the structural FLOPs
 column shows the same effect analytically (what the H100 saw in the paper,
 the v5e roofline sees via the dry-run).
@@ -13,32 +17,50 @@ the v5e roofline sees via the dry-run).
 
 from __future__ import annotations
 
+import argparse
+
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import CSV, time_us
 from repro import models
 from repro.configs import get_config
 from repro.core import inter_prune, intra_prune, iter_moe_layer_params
 from repro.core.plan import moe_ffn_flops_per_token
-from repro.models.moe import moe_dense
+from repro.models.moe import moe_dense, moe_gmm
+
+IMPL_FNS = {"dense": moe_dense, "gmm": moe_gmm}
 
 
-def run(csv: CSV, *, tokens: int = 2048, fast: bool = False) -> None:
+def layer_setup(tokens: int):
+    """One MoE layer + input batch shared by the fig2 and dispatch benches
+    (same workload, so the curves are comparable across bench files)."""
     cfg = get_config("olmoe-1b-7b").reduced().with_(
         num_experts=16, moe_top_k=8, moe_d_ff=128, d_model=256,
         dtype="float32")
     params = models.init_params(jax.random.PRNGKey(0), cfg)
     _, mp = next(iter_moe_layer_params(params, cfg))
     x = jax.random.normal(jax.random.PRNGKey(1), (tokens, cfg.d_model))
+    return cfg, params, mp, x
+
+
+def layer_flops_per_token(cfg, k: int) -> float:
+    return moe_ffn_flops_per_token(
+        cfg.with_(block_pattern=None), (k,) * cfg.num_moe_layers
+    ) / cfg.num_moe_layers
+
+
+def run(csv: CSV, *, tokens: int = 2048, fast: bool = False,
+        impl: str = "dense") -> None:
+    layer_fn = IMPL_FNS[impl]
+    cfg, params, mp, x = layer_setup(tokens)
+
+    tag = "fig2" if impl == "dense" else f"fig2_{impl}"
 
     def bench(name, mp_, cfg_, k):
-        fn = jax.jit(lambda p, xx: moe_dense(p, cfg_, xx, k)[0])
+        fn = jax.jit(lambda p, xx: layer_fn(p, cfg_, xx, k)[0])
         us = time_us(fn, mp_, x, iters=3 if fast else 10)
-        flops = moe_ffn_flops_per_token(
-            cfg_.with_(block_pattern=None), (k,) * cfg_.num_moe_layers)
-        csv.add(f"fig2/{name}", us,
-                f"flops_per_tok={flops / cfg_.num_moe_layers:.3g}")
+        csv.add(f"{tag}/{name}", us,
+                f"flops_per_tok={layer_flops_per_token(cfg_, k):.3g}")
 
     bench(f"baseline_top{cfg.moe_top_k}", mp, cfg, cfg.moe_top_k)
     for frac in (0.125, 0.25, 0.5):
@@ -54,6 +76,12 @@ def run(csv: CSV, *, tokens: int = 2048, fast: bool = False) -> None:
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--impl", default="dense", choices=sorted(IMPL_FNS),
+                    help="MoE dispatch implementation to measure")
+    ap.add_argument("--tokens", type=int, default=2048)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
     c = CSV()
     c.header()
-    run(c)
+    run(c, tokens=args.tokens, fast=args.fast, impl=args.impl)

@@ -11,6 +11,7 @@ import numpy as np
 
 from benchmarks.common import CSV, trained_tiny_moe
 from repro.core import apply_plan_params, optimize
+from repro.models.opts import ModelOpts
 from repro.serving import Engine, Request
 
 
@@ -42,6 +43,21 @@ def run(csv: CSV, *, fast: bool = False) -> None:
     csv.add("serving/lexi_B%d" % budget, 1e6 / max(lexi, 1e-9),
             f"tok_per_s={lexi:.1f};plan={plan.plan};"
             f"speedup={lexi / base:.2f}x")
+
+    # same engines on the sort-based dropless dispatch (production path)
+    gmm_opts = ModelOpts(moe_impl="gmm")
+    eng3 = Engine(cfg, params, max_batch=4, max_len=128, prefill_pad=16,
+                  opts=gmm_opts)
+    eng3.serve(_requests(cfg.vocab_size, n_req))
+    base_g = eng3.throughput()
+    csv.add("serving/baseline~gmm", 1e6 / max(base_g, 1e-9),
+            f"tok_per_s={base_g:.1f};topk={cfg.moe_top_k}")
+    eng4 = Engine(cfg_l, params_l, max_batch=4, max_len=128, prefill_pad=16,
+                  opts=gmm_opts)
+    eng4.serve(_requests(cfg.vocab_size, n_req))
+    lexi_g = eng4.throughput()
+    csv.add("serving/lexi_B%d~gmm" % budget, 1e6 / max(lexi_g, 1e-9),
+            f"tok_per_s={lexi_g:.1f};speedup={lexi_g / base_g:.2f}x")
 
 
 if __name__ == "__main__":

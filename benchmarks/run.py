@@ -17,6 +17,8 @@ from benchmarks.common import CSV
 
 BENCHES = {
     "fig2": ("bench_moe_topk", "throughput vs active experts under pruning"),
+    "dispatch": ("bench_moe_dispatch",
+                 "dense vs gmm dispatch tokens/s -> BENCH_moe_dispatch.json"),
     "fig3": ("bench_sensitivity", "per-layer top-k sensitivity heatmap"),
     "fig4": ("bench_lexi_vs_pruning", "LExI vs pruning quality/throughput"),
     "alg2": ("bench_search", "EA vs exact-DP allocator"),

@@ -29,6 +29,11 @@ def main():
     cfg, params, dc, res = trained_tiny_moe(steps=args.steps)
     print(f"trained {cfg.name}-family model for {args.steps} steps; "
           f"final loss {res.losses[-1]:.3f}")
+    # serve and evaluate BOTH engines on the sort-based dropless production
+    # path, so the comparison isolates the plan: capacity shrinks with k and
+    # would punish reduced-k plans for token drops, not routing width
+    # (DESIGN.md §1)
+    cfg = cfg.with_(moe_impl="gmm")
 
     rng = np.random.default_rng(0)
     def reqs():

@@ -118,6 +118,8 @@ class CellCosts:
 
 def costs_from_compiled(compiled, hlo_text: Optional[str] = None) -> CellCosts:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     text = hlo_text if hlo_text is not None else compiled.as_text()
     coll = collective_stats(text)
     return CellCosts(float(ca.get("flops", 0.0)),

@@ -103,7 +103,7 @@ class ModelConfig:
     norm_topk_prob: bool = False     # renormalize the selected k probabilities
     first_k_dense: int = 0           # leading dense layers (DeepSeek-style)
     moe_capacity_factor: float = 1.25
-    moe_impl: str = "dense"          # dense | ep_a2a | ep_psum (models/moe.py)
+    moe_impl: str = "dense"          # dense | gmm | ep_a2a | ep_psum (models/moe/)
     #: NAEE-style dynamic expert skipping threshold (baseline; 0 = off).
     #: Zeroes slot s>0 when weight_s < tau * weight_0.  Data-dependent, so it
     #: cannot shrink static shapes on TPU (DESIGN.md) -- quality effect only.

@@ -9,9 +9,12 @@ Faithful to the published algorithm:
   * the perturbation is the Frobenius norm ``||Y_k - Y_base||_F``, averaged
     over ``n_iter`` Monte-Carlo draws.
 
-Profiling runs the layer dropless (capacity factor = num_experts) so the
-result measures routing-width sensitivity, not capacity-overflow noise --
-the paper's reference implementation (HF eager MoE) has no capacity concept.
+Profiling runs the layer on the sort-based dropless dispatch path (``gmm``)
+-- the same code production inference serves -- so the result measures
+routing-width sensitivity, not capacity-overflow noise.  The paper's
+reference implementation (HF eager MoE) has no capacity concept, and
+neither does this path: no capacity-factor inflation is needed to fake
+droplessness.
 
 The output ``SensitivityTable`` is all Stage 2 needs: search never loads the
 model (paper §4: "finds solutions fast without needing to load the actual
@@ -31,7 +34,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.blocks import group_pattern
-from repro.models.moe import moe_dense
+from repro.models.moe import moe_gmm
 
 
 # --------------------------------------------------------------------------- #
@@ -105,16 +108,17 @@ def iter_moe_layer_params(params: Dict, cfg: ModelConfig) -> Iterator[Tuple[int,
 
 def _layer_deltas_fn(cfg: ModelConfig, target_topks: Sequence[int], batch: int,
                      seq: int):
-    """jitted fn: (moe_params, key) -> deltas [len(target_topks)]."""
-    dropless = cfg.with_(moe_capacity_factor=float(cfg.num_experts))
+    """jitted fn: (moe_params, key) -> deltas [len(target_topks)].
 
+    Runs on the ``gmm`` dropless path directly -- no capacity-factor hack.
+    """
     def fn(moe_params, key):
         x = jax.random.normal(key, (batch * seq, cfg.d_model), jnp.float32)
         x = x.astype(jnp.dtype(cfg.dtype))
-        y_base, _ = moe_dense(moe_params, dropless, x, dropless.moe_top_k)
+        y_base, _ = moe_gmm(moe_params, cfg, x, cfg.moe_top_k)
         deltas = []
         for k in target_topks:
-            y_k, _ = moe_dense(moe_params, dropless, x, int(k))
+            y_k, _ = moe_gmm(moe_params, cfg, x, int(k))
             d = jnp.linalg.norm((y_k - y_base).astype(jnp.float32).reshape(-1))
             deltas.append(d)
         return jnp.stack(deltas)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: ragged grouped SwiGLU matmul over a sorted token buffer.
+
+The sort-based dropless MoE path (``models/moe/gmm.py``) argsorts token
+copies by expert id and pads each expert's group to a multiple of the row
+tile ``block_m``, so every row tile of the packed buffer ``xs [M, D]``
+belongs to exactly one expert.  The host precomputes two small int32 arrays
+from the routing decision:
+
+  ``tile_expert [n_tiles]``  which expert's weights tile *i* multiplies
+                             (clamped into ``[0, E)`` for dead tiles);
+  ``tile_valid  [n_tiles]``  1 iff the tile holds at least one real row.
+
+Both ride in through ``PrefetchScalarGridSpec``: they are available to the
+BlockSpec index maps *before* the kernel body runs, so the correct expert's
+weight slices are DMA'd per tile (no gather in the kernel, no [E, C, D]
+capacity buffer in HBM), and entirely-padding tiles skip the MXU work.
+
+Grid: ``(n_tiles, F/bf)`` -- the ffn dimension iterates fastest and
+sequentially on TPU; the output tile accumulates partial ``h @ w2`` terms in
+a f32 VMEM scratch and is flushed once per row tile (same accumulation
+scheme as ``kernels/moe_ffn.py``, which this kernel generalizes to
+variable-length expert groups).
+
+Unlike the fixed-capacity kernel there is no per-expert capacity: memory is
+O(T*k*D) + per-group tile padding, and compute scales with the number of
+*occupied* tiles -- a LExI plan with smaller per-layer k runs proportionally
+fewer tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(te_ref, tv_ref, x_ref, w1_ref, w2_ref, o_ref, acc_ref, *,
+            n_f_steps: int):
+    """One (row-tile, f-step) block.
+
+    te_ref/tv_ref           scalar-prefetch refs (consumed by index maps)
+    x_ref   [bm, D]         packed sorted rows for this tile
+    w1_ref  [1, D, 2, bf]   fused gate/up slice of tile_expert[i]
+    w2_ref  [1, bf, D]      down-projection slice of tile_expert[i]
+    o_ref   [bm, D]         output tile (written at the last f-step)
+    acc_ref [bm, D] f32     VMEM accumulator across f-steps
+    """
+    del te_ref
+    i = pl.program_id(0)
+    f_step = pl.program_id(1)
+
+    @pl.when(tv_ref[i] == 1)
+    def _compute():
+        x = x_ref[...].astype(jnp.float32)                   # [bm, D]
+        gate_w = w1_ref[0, :, 0, :].astype(jnp.float32)      # [D, bf]
+        up_w = w1_ref[0, :, 1, :].astype(jnp.float32)        # [D, bf]
+        gate = jax.lax.dot(x, gate_w, precision=jax.lax.Precision.DEFAULT)
+        up = jax.lax.dot(x, up_w, precision=jax.lax.Precision.DEFAULT)
+        h = jax.nn.silu(gate) * up                           # [bm, bf]
+        partial = jax.lax.dot(h, w2_ref[0].astype(jnp.float32))  # [bm, D]
+
+        @pl.when(f_step == 0)
+        def _init():
+            acc_ref[...] = partial
+
+        @pl.when(f_step > 0)
+        def _acc():
+            acc_ref[...] += partial
+
+    @pl.when(f_step == n_f_steps - 1)
+    def _flush():
+        @pl.when(tv_ref[i] == 1)
+        def _out():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+        @pl.when(tv_ref[i] == 0)
+        def _dead():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def moe_gmm_pallas(xs, w1, w2, tile_expert, tile_valid, *, block_m: int,
+                   block_f: int = 256, interpret: bool = False):
+    """Ragged grouped SwiGLU FFN over a tile-aligned sorted buffer.
+
+    xs [M, D] (M = n_tiles * block_m), w1 [E, D, 2F], w2 [E, F, D],
+    tile_expert [n_tiles] i32 in [0, E), tile_valid [n_tiles] i32 -> [M, D].
+    """
+    m, d = xs.shape
+    e, f = w2.shape[0], w2.shape[1]
+    assert w1.shape == (e, d, 2 * f), (w1.shape, (e, d, 2 * f))
+    assert m % block_m == 0, (m, block_m)
+    n_tiles = m // block_m
+    assert tile_expert.shape == (n_tiles,), (tile_expert.shape, n_tiles)
+    bf = min(block_f, f)
+    while f % bf:
+        bf //= 2
+    bf = max(bf, 1)
+    n_f = f // bf
+
+    w1v = w1.reshape(e, d, 2, f)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles, n_f),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, fi, te, tv: (i, 0)),
+            pl.BlockSpec((1, d, 2, bf), lambda i, fi, te, tv: (te[i], 0, 0, fi)),
+            pl.BlockSpec((1, bf, d), lambda i, fi, te, tv: (te[i], fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i, fi, te, tv: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_f_steps=n_f),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), xs.dtype),
+        interpret=interpret,
+    )(tile_expert, tile_valid, xs, w1v, w2)

@@ -28,6 +28,20 @@ def moe_ffn(xe, w1, w2, *, block_c: int = 128, block_f: int = 256):
                           interpret=_interpret())
 
 
+@partial(jax.jit, static_argnames=("block_m", "block_f"))
+def moe_gmm(xs, w1, w2, tile_expert, tile_valid, *, block_m: int,
+            block_f: int = 256):
+    """Ragged grouped SwiGLU over a tile-aligned sorted buffer.
+
+    xs [M, D] (M = n_tiles*block_m), w1 [E, D, 2F], w2 [E, F, D],
+    tile_expert/tile_valid [n_tiles] i32 -> [M, D].
+    """
+    from repro.kernels.moe_gmm import moe_gmm_pallas
+    return moe_gmm_pallas(xs, w1, w2, tile_expert, tile_valid,
+                          block_m=block_m, block_f=block_f,
+                          interpret=_interpret())
+
+
 @partial(jax.jit, static_argnames=("window", "block_q", "block_k"))
 def flash_attention_bhsd(q, k, v, *, window=None, block_q: int = 512,
                          block_k: int = 512):

@@ -16,6 +16,28 @@ def moe_ffn_ref(xe, w1, w2):
     return out.astype(xe.dtype)
 
 
+def moe_gmm_ref(xs, w1, w2, group_sizes):
+    """Ragged grouped SwiGLU over a sorted buffer: the ground truth for
+    ``kernels/moe_gmm.py``.
+
+    xs [M, D] rows sorted by expert (group e occupies the ``group_sizes[e]``
+    rows starting at ``cumsum_exclusive(group_sizes)[e]``; rows beyond
+    ``sum(group_sizes)`` are padding), w1 [E, D, 2F], w2 [E, F, D] -> [M, D]
+    with padding rows zeroed.
+    """
+    e = w1.shape[0]
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    row = jnp.arange(xs.shape[0])
+    out = jnp.zeros(xs.shape, jnp.float32)
+    for ei in range(e):
+        sel = (row >= starts[ei]) & (row < starts[ei] + group_sizes[ei])
+        h = xs.astype(jnp.float32) @ w1[ei].astype(jnp.float32)
+        gate, up = jnp.split(h, 2, axis=-1)
+        y = (jax.nn.silu(gate) * up) @ w2[ei].astype(jnp.float32)
+        out = jnp.where(sel[:, None], y, out)
+    return out.astype(xs.dtype)
+
+
 def flash_decode_ref(q, k, v, pos, cur_pos, *, window=None):
     """One-token decode attention over a position-masked cache.
 

@@ -265,7 +265,8 @@ def _decode_attend_seqshard(cfg: ModelConfig, q, k_new, v_new, pos_b, cache,
     pspec = P(bdim, "model")
     bspec3 = P(bdim, None, None)
     bspec1 = P(bdim)
-    out, k2, v2, p2 = jax.shard_map(
+    from repro.models.common import shard_map
+    out, k2, v2, p2 = shard_map(
         body, mesh=mesh,
         in_specs=(qspec, bspec3, bspec3, bspec1, cspec, cspec, pspec),
         out_specs=(qspec, cspec, cspec, pspec),

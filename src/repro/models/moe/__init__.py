@@ -1,0 +1,48 @@
+"""Mixture-of-Experts layer with per-layer (LExI) top-k.
+
+Structured as a ``Router -> Dispatch -> Compute -> Combine`` pipeline:
+
+  ``router.py``    expert scoring / top-k / capacity sizing
+  ``dispatch.py``  token movement: capacity buffers + sort-based dropless
+  ``compute.py``   expert SwiGLU over each layout (jnp or Pallas kernel)
+  ``dense.py``     GShard capacity-buffer impl (reference / small scale)
+  ``gmm.py``       sort-based dropless impl (production inference path)
+  ``ep.py``        shard_map expert parallelism (a2a train, psum decode)
+  ``registry.py``  impl registry + the public ``moe()`` entry
+
+The router follows each model family: softmax or sigmoid scoring, optional
+top-k renormalization, shared (always-on) experts.  All impls are
+numerically equivalent up to capacity drops (``gmm`` is exactly dropless)
+and are pinned against each other in tests.
+"""
+
+from repro.models.moe.compute import add_shared, expert_ffn, grouped_ffn  # noqa: F401
+from repro.models.moe.dense import moe_dense  # noqa: F401
+from repro.models.moe.dispatch import (  # noqa: F401
+    SortPlan,
+    _gather_combine,
+    _scatter,
+    _slot_positions,
+    default_block_m,
+    make_sort_plan,
+    sort_combine,
+    sort_dispatch,
+)
+from repro.models.moe.ep import (  # noqa: F401
+    _ep_param_specs,
+    moe_ep_a2a,
+    moe_ep_a2a_local,
+    moe_ep_psum,
+    moe_ep_psum_local,
+)
+from repro.models.moe.gmm import moe_gmm  # noqa: F401
+from repro.models.moe.params import init_moe  # noqa: F401
+from repro.models.moe.registry import (  # noqa: F401
+    available_impls,
+    moe,
+    register_impl,
+)
+from repro.models.moe.router import capacity, route  # noqa: F401
+
+# back-compat alias for callers of the pre-package private helper
+_add_shared = add_shared

@@ -1,0 +1,60 @@
+"""Compute stage: expert SwiGLU FFN over each dispatch layout.
+
+``expert_ffn`` consumes the capacity-buffer layout ``[E, C, D]``;
+``grouped_ffn`` consumes the sorted dropless layout ``[M, D]`` described by
+a ``SortPlan``.  Both have a pure-jnp path (CPU / profiling / autodiff
+through XLA) and a Pallas kernel path selected by ``use_kernel``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.mlp import mlp
+from repro.models.moe.dispatch import SortPlan
+
+
+def expert_ffn(w1, w2, xe, use_kernel: bool = False):
+    """xe [E, C, D] -> [E, C, D] (SwiGLU per expert, capacity layout)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.moe_ffn(xe, w1, w2)
+    h = jnp.einsum("ecd,edf->ecf", xe, w1)
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def grouped_ffn(w1, w2, xs, plan: SortPlan, use_kernel: bool = False):
+    """xs [M, D] sorted-by-expert -> [M, D] (padding rows stay zero).
+
+    Kernel path: the plan-aware ragged grouped-matmul Pallas kernel walks
+    row tiles via the prefetched ``tile_expert`` map and skips empty tiles.
+    jnp path: the same tile decomposition as a batched matmul with per-tile
+    gathered weights -- O(M*D*F) like the kernel (``lax.ragged_dot`` would
+    be the obvious spelling but lowers to an O(M*E*D*F) masked dot on CPU).
+    Padding rows are zero and SwiGLU(0)*0 @ w2 == 0, so no masking is
+    needed in either path.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.moe_gmm(xs, w1, w2, plan.tile_expert, plan.tile_valid,
+                            block_m=plan.block_m)
+    m, d = xs.shape
+    xt = xs.reshape(-1, plan.block_m, d)              # [n_tiles, bm, D]
+    h = jnp.einsum("tbd,tdf->tbf", xt, w1[plan.tile_expert])
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    yt = jnp.einsum("tbf,tfd->tbd", h, w2[plan.tile_expert])
+    return yt.reshape(m, d)
+
+
+def add_shared(params: Dict, cfg: ModelConfig, x2d, y):
+    """Always-on shared experts (Qwen/DeepSeek) on top of the routed output."""
+    if cfg.num_shared_experts:
+        y = y + mlp(params["shared"], x2d)
+    return y

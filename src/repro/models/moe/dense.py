@@ -1,0 +1,33 @@
+"""``dense`` impl: GShard-style capacity-buffer dispatch (single device).
+
+Simple, differentiable, auto-partitioned by GSPMD.  Memory is O(T*E*C) for
+the dispatch mask -- the CPU / small-scale path; not viable at production
+token counts (use ``gmm`` for that).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.moe.compute import add_shared, expert_ffn
+from repro.models.moe.dispatch import _gather_combine, _scatter, _slot_positions
+from repro.models.moe.router import capacity, route
+
+
+def moe_dense(params: Dict, cfg: ModelConfig, x2d, top_k: int,
+              use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x2d [T, D] -> (y2d [T, D], aux_loss)."""
+    t, d = x2d.shape
+    e = cfg.num_experts
+    weights, idx, aux = route(params, cfg, x2d, top_k)
+    cap = capacity(t, top_k, e, cfg.moe_capacity_factor)
+    pos, keep = _slot_positions(idx, e, cap)
+
+    xe = _scatter(x2d, idx, pos, keep, e, cap)                    # [E,C,D]
+    ye = expert_ffn(params["w1"], params["w2"], xe, use_kernel)
+    y = _gather_combine(ye, weights, idx, pos, keep, cap).astype(x2d.dtype)
+    y = add_shared(params, cfg, x2d, y)
+    return y, aux

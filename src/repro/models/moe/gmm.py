@@ -1,0 +1,36 @@
+"""``gmm`` impl: sort-based dropless dispatch + ragged grouped matmul.
+
+The production inference path (vLLM FusedMoE / MegaBlocks pattern): argsort
+token copies by expert id, compute per-expert group sizes, run the grouped
+SwiGLU over variable-length expert groups, unsort and combine.  No capacity
+buffers, no token drops; memory O(T*k*D) instead of O(T*E*C), and compute
+scales with the routed token count -- which is what converts a LExI plan's
+smaller per-layer k into proportional wall-clock savings.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.moe.compute import add_shared, grouped_ffn
+from repro.models.moe.dispatch import default_block_m, make_sort_plan, \
+    sort_combine, sort_dispatch
+from repro.models.moe.router import route
+
+
+def moe_gmm(params: Dict, cfg: ModelConfig, x2d, top_k: int,
+            use_kernel: bool = False, block_m: Optional[int] = None,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x2d [T, D] -> (y2d [T, D], aux_loss).  Dropless for any T, k."""
+    t, _ = x2d.shape
+    weights, idx, aux = route(params, cfg, x2d, top_k)
+    bm = block_m or default_block_m(t * top_k)
+    plan = make_sort_plan(idx, cfg.num_experts, bm)
+    xs = sort_dispatch(x2d, plan, top_k)                          # [M, D]
+    ys = grouped_ffn(params["w1"], params["w2"], xs, plan, use_kernel)
+    y = sort_combine(ys, weights, plan).astype(x2d.dtype)
+    y = add_shared(params, cfg, x2d, y)
+    return y, aux

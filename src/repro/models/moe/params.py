@@ -1,0 +1,26 @@
+"""Parameter init for one MoE layer (shared by every dispatch impl)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, param_dtype, split_keys
+from repro.models.mlp import init_mlp
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    dt = param_dtype(cfg)
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = split_keys(key, 4)
+    p: Dict = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),  # router kept in f32
+        "w1": dense_init(ks[1], (e, d, 2 * f), dt),
+        "w2": dense_init(ks[2], (e, f, d), dt, in_axis_size=f),
+    }
+    if cfg.num_shared_experts:
+        sf = cfg.shared_expert_d_ff or cfg.moe_d_ff * cfg.num_shared_experts
+        p["shared"] = init_mlp(ks[3], cfg, d_ff=sf)
+    return p

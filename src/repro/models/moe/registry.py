@@ -1,0 +1,93 @@
+"""Dispatch-strategy registry and the public ``moe()`` entry point.
+
+Every implementation is a ``Router -> Dispatch -> Compute -> Combine``
+pipeline registered under the name ``cfg.moe_impl`` selects (DESIGN.md §1
+has the full matrix):
+
+  ``dense``    capacity-buffer einsum dispatch; O(T*E*C) memory; CPU /
+               small-scale / autodiff reference.
+  ``gmm``      sort-based dropless dispatch + ragged grouped matmul
+               (Pallas kernel on TPU); O(T*k*D) memory; the production
+               inference path.
+  ``ep_a2a``   expert parallelism via all_to_all (train / prefill).
+  ``ep_psum``  expert parallelism via psum (decode-shaped batches).
+
+Impls registered here take ``(params, cfg, x2d, top_k, *, mesh, use_kernel,
+a2a_chunks)`` and return ``(y2d, aux)``.  New strategies (EP over the sorted
+layout, multi-plan serving) register with ``register_impl`` without touching
+model code.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.models.moe.dense import moe_dense
+from repro.models.moe.ep import moe_ep_a2a, moe_ep_psum
+from repro.models.moe.gmm import moe_gmm
+
+#: impl name -> (pipeline fn, needs_mesh)
+_IMPLS: Dict[str, Tuple[Callable, bool]] = {}
+
+
+def register_impl(name: str, *, needs_mesh: bool = False):
+    """Register a dispatch pipeline under ``cfg.moe_impl`` name ``name``."""
+    def deco(fn: Callable):
+        _IMPLS[name] = (fn, needs_mesh)
+        return fn
+    return deco
+
+
+def available_impls() -> Tuple[str, ...]:
+    return tuple(sorted(_IMPLS))
+
+
+@register_impl("dense")
+def _dense(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
+           a2a_chunks=1):
+    del mesh, a2a_chunks
+    return moe_dense(params, cfg, x2d, top_k, use_kernel)
+
+
+@register_impl("gmm")
+def _gmm(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
+         a2a_chunks=1):
+    del mesh, a2a_chunks  # jnp/Pallas body; GSPMD partitions it under jit
+    return moe_gmm(params, cfg, x2d, top_k, use_kernel)
+
+
+@register_impl("ep_a2a", needs_mesh=True)
+def _ep_a2a(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
+            a2a_chunks=1):
+    return moe_ep_a2a(params, cfg, x2d, top_k, mesh=mesh,
+                      use_kernel=use_kernel, a2a_chunks=a2a_chunks)
+
+
+@register_impl("ep_psum", needs_mesh=True)
+def _ep_psum(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
+             a2a_chunks=1):
+    del a2a_chunks
+    return moe_ep_psum(params, cfg, x2d, top_k, mesh=mesh,
+                       use_kernel=use_kernel)
+
+
+def moe(params: Dict, cfg: ModelConfig, x, top_k: int, *,
+        impl: Optional[str] = None, mesh=None, use_kernel: bool = False,
+        a2a_chunks: int = 1):
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    ``impl`` overrides ``cfg.moe_impl``; mesh-requiring impls fall back to
+    ``dense`` when no mesh is given (single-device runs of EP configs).
+    """
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    impl = impl or cfg.moe_impl
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown moe impl {impl!r}; have {available_impls()}")
+    fn, needs_mesh = _IMPLS[impl]
+    if needs_mesh and mesh is None:
+        fn, _ = _IMPLS["dense"]
+    y2d, aux = fn(params, cfg, x2d, top_k, mesh=mesh, use_kernel=use_kernel,
+                  a2a_chunks=a2a_chunks)
+    return y2d.reshape(b, s, d), aux

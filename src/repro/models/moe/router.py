@@ -1,0 +1,48 @@
+"""Router stage: expert scoring, top-k selection, capacity sizing.
+
+Every dispatch implementation starts here -- ``route`` is the single source
+of truth for scores, the NAEE dynamic-skipping baseline, and the
+load-balancing auxiliary loss, so the implementations stay numerically
+interchangeable.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def route(params: Dict, cfg: ModelConfig, x2d, top_k: int):
+    """x2d [T, D] -> (weights [T,k] f32, idx [T,k] i32, aux_loss scalar)."""
+    logits = x2d.astype(jnp.float32) @ params["router"]          # [T, E]
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(scores, top_k)                  # [T, k]
+    if cfg.norm_topk_prob:
+        weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-20)
+    if cfg.dynamic_skip_tau > 0.0 and top_k >= 2:
+        # NAEE dynamic skipping baseline: drop low-confidence extra experts
+        thresh = cfg.dynamic_skip_tau * weights[:, :1]
+        keep = jnp.concatenate(
+            [jnp.ones_like(weights[:, :1], bool), weights[:, 1:] >= thresh], 1)
+        weights = weights * keep
+
+    # Switch-transformer load-balancing auxiliary loss (used in training).
+    e = cfg.num_experts
+    me = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=(0, 1))
+    ce = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return weights, idx, aux
+
+
+def capacity(t: int, top_k: int, num_experts: int, factor: float) -> int:
+    """Per-expert buffer rows for the capacity-based dispatch family."""
+    c = int(math.ceil(t * top_k / num_experts * factor))
+    return max(4, ((c + 3) // 4) * 4)  # pad to a multiple of 4 lanes

@@ -10,7 +10,8 @@ from typing import Optional
 class ModelOpts:
     #: attention implementation for train/prefill ("einsum" | "flash")
     use_flash: bool = False
-    #: MoE dispatch implementation override (None -> cfg.moe_impl)
+    #: MoE dispatch implementation override (None -> cfg.moe_impl):
+    #: dense | gmm | ep_a2a | ep_psum (models/moe/registry.py)
     moe_impl: Optional[str] = None
     #: use the Pallas grouped expert-FFN kernel inside MoE dispatch
     use_moe_kernel: bool = False

@@ -28,7 +28,7 @@ import numpy as np
 from repro import models
 from repro.configs.base import ModelConfig
 from repro.models.opts import DEFAULT_OPTS, ModelOpts
-from repro.serving.sampling import sample
+from repro.serving.sampling import sample, sample_per_slot
 
 
 @dataclass
@@ -170,8 +170,10 @@ class Engine:
         logits, self.caches = self._decode(self.params, tokens, pos,
                                            self.caches)
         self.key, sub = jax.random.split(self.key)
-        temp = float(np.max(self.slot_temp[active]))
-        nxt = np.asarray(sample(logits, sub, temperature=temp))
+        # per-slot temperature: one hot request must not make concurrent
+        # greedy requests stochastic
+        nxt = np.asarray(sample_per_slot(logits, sub,
+                                         jnp.asarray(self.slot_temp)))
         self.stats["steps"] += 1
 
         finished: List[Result] = []

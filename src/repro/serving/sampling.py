@@ -16,3 +16,18 @@ def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0):
         kth = vals[:, -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_per_slot(logits, key, temperatures):
+    """logits [B, V], temperatures [B] -> tokens [B].
+
+    Each row samples with its own temperature (greedy where it is 0) -- one
+    vectorized pass, so a single hot request cannot make its greedy
+    neighbours stochastic.
+    """
+    temperatures = jnp.asarray(temperatures, jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temperatures > 0.0, temperatures, 1.0)
+    stochastic = jax.random.categorical(
+        key, logits / safe_t[:, None], axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures > 0.0, stochastic, greedy)
