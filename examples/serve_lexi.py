@@ -42,7 +42,7 @@ def main():
                         max_new_tokens=args.max_new)
                 for i in range(args.requests)]
 
-    # -- baseline engine ---------------------------------------------------- #
+    # -- ONE engine, one set of weights, two specializations ---------------- #
     eng = Engine(cfg, params, max_batch=4, max_len=128, prefill_pad=16)
     eng.serve(reqs())
     base_tput = eng.throughput()
@@ -50,14 +50,14 @@ def main():
     print(f"baseline  top-k={cfg.moe_top_k}: "
           f"{base_tput:8.1f} tok/s   ppl={base_ppl:.3f}")
 
-    # -- LExI engine at 50% budget ------------------------------------------ #
+    # -- LExI plan at 50% budget served from the SAME runner ---------------- #
     budget = cfg.num_moe_layers * cfg.moe_top_k // 2
     plan = optimize(params, cfg, budget, method="dp", n_iter=8,
                     profile_batch=2, profile_seq=32)
+    eng.add_plan("lexi", plan)
+    eng.serve(reqs(), plan="lexi")
+    lexi_tput = eng.throughput()
     cfg_l, params_l = apply_plan_params(params, cfg, plan)
-    eng2 = Engine(cfg_l, params_l, max_batch=4, max_len=128, prefill_pad=16)
-    eng2.serve(reqs())
-    lexi_tput = eng2.throughput()
     lexi_ppl = eval_perplexity(params_l, cfg_l, dc, steps=4)
     print(f"LExI plan {plan.plan}: "
           f"{lexi_tput:8.1f} tok/s   ppl={lexi_ppl:.3f}")

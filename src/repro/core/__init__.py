@@ -6,6 +6,7 @@ from repro.core.plan import (  # noqa: F401
     model_flops_per_token,
     moe_ffn_flops_per_token,
     uniform_plan,
+    validate_plan,
 )
 from repro.core.pruning import inter_prune, intra_prune  # noqa: F401
 from repro.core.search import (  # noqa: F401

@@ -35,6 +35,11 @@ class LexiPlan:
     def load(cls, path: str) -> "LexiPlan":
         with open(path) as f:
             d = json.load(f)
+        if "plan" not in d or not d["plan"]:
+            raise ValueError(f"{path}: not a LexiPlan artifact (empty plan)")
+        if not all(isinstance(k, int) and k >= 1 for k in d["plan"]):
+            raise ValueError(f"{path}: plan entries must be ints >= 1, "
+                             f"got {d['plan']}")
         d["plan"] = tuple(d["plan"])
         return cls(**d)
 
@@ -45,9 +50,30 @@ def uniform_plan(cfg: ModelConfig, k: int) -> LexiPlan:
                     fitness=float("nan"), method="uniform", k_base=cfg.moe_top_k)
 
 
-def apply_plan(cfg: ModelConfig, plan: LexiPlan) -> ModelConfig:
+def validate_plan(cfg: ModelConfig, plan: LexiPlan) -> None:
+    """Check a plan is deployable on ``cfg``; raise ValueError if not.
+
+    A stale or mismatched artifact should fail loudly at load/apply time,
+    not as a shape error deep inside ``pattern()``.
+    """
     if plan.arch != cfg.name:
-        raise ValueError(f"plan for {plan.arch} applied to {cfg.name}")
+        raise ValueError(f"plan was searched for arch {plan.arch!r} but is "
+                         f"being applied to {cfg.name!r}")
+    n = cfg.num_moe_layers
+    if len(plan.plan) != n:
+        raise ValueError(
+            f"plan has {len(plan.plan)} per-layer k entries but {cfg.name} "
+            f"has {n} MoE layers -- was it searched on a different depth "
+            f"or --reduced setting?")
+    for i, k in enumerate(plan.plan):
+        if not 1 <= k <= cfg.num_experts:
+            raise ValueError(
+                f"plan k={k} at MoE layer {i} outside valid range "
+                f"[1, {cfg.num_experts}] for {cfg.name}")
+
+
+def apply_plan(cfg: ModelConfig, plan: LexiPlan) -> ModelConfig:
+    validate_plan(cfg, plan)
     return cfg.with_lexi_plan(plan.plan)
 
 

@@ -1,16 +1,20 @@
 """Serving launcher: batched generation with an optional LExI plan.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --reduced \
-        --requests 16 --max-new 32 --lexi-budget-frac 0.5
+        --requests 16 --max-new 32 --lexi-budget-frac 0.5 --save-plan plan.json
 
-Compares baseline uniform top-k against the LExI-planned engine when a
-budget is given (the paper's deployment story, end to end).
+    # reuse a searched plan without re-running the optimizer
+    PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --reduced \
+        --requests 16 --plan plan.json
+
+Baseline and plan are served from ONE engine (one runner, one set of
+weights): the plan is registered as a named specialization and selected
+per workload, which is the paper's deployment story end to end.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -29,10 +33,16 @@ def synth_requests(n: int, vocab: int, *, lo: int = 8, hi: int = 48,
             for i in range(n)]
 
 
-def run_engine(cfg, params, reqs, *, max_batch, max_len):
-    eng = Engine(cfg, params, max_batch=max_batch, max_len=max_len)
-    results = eng.serve(reqs)
-    return results, eng.throughput(), eng.stats
+def _report(tag: str, eng: Engine) -> float:
+    tput = eng.throughput()
+    s = eng.stats
+    print(f"{tag}: {tput:,.1f} tok/s  "
+          f"(prefill={s['prefill_tokens']} decode={s['decode_tokens']} "
+          f"steps={s['steps']} "
+          f"ttft_p50={s.get('ttft_p50_s', float('nan')) * 1e3:.0f}ms "
+          f"ttft_p95={s.get('ttft_p95_s', float('nan')) * 1e3:.0f}ms "
+          f"decode_tps_p50={s.get('decode_tps_p50', float('nan')):.1f})")
+    return tput
 
 
 def main() -> int:
@@ -43,7 +53,16 @@ def main() -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--lexi-budget-frac", type=float, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--cache-layout", choices=["paged", "contiguous"],
+                    default=None)
+    ap.add_argument("--scheduler", choices=["fifo", "sjf"], default="fifo")
+    ap.add_argument("--lexi-budget-frac", type=float, default=None,
+                    help="search a plan inline at this active-expert budget")
+    ap.add_argument("--plan", default=None,
+                    help="path to a saved LexiPlan JSON to serve")
+    ap.add_argument("--save-plan", default=None,
+                    help="write the searched plan here for later --plan runs")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -54,25 +73,36 @@ def main() -> int:
     reqs = synth_requests(args.requests, cfg.vocab_size,
                           max_new=args.max_new, seed=args.seed)
 
-    print(f"arch={cfg.name} baseline top-k={cfg.moe_top_k or 'n/a'}")
-    _, tput, stats = run_engine(cfg, params, reqs,
-                                max_batch=args.max_batch, max_len=args.max_len)
-    print(f"baseline: {tput:,.1f} tok/s  ({stats})")
+    eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
+                 prefill_chunk=args.prefill_chunk,
+                 cache_layout=args.cache_layout, scheduler=args.scheduler)
+    print(f"arch={cfg.name} baseline top-k={cfg.moe_top_k or 'n/a'} "
+          f"layout={eng.kv.layout} chunk={eng.prefill_chunk or 'whole'}")
+    eng.serve(reqs)
+    tput = _report("baseline", eng)
 
-    if args.lexi_budget_frac is not None and cfg.is_moe and cfg.moe_top_k > 1:
-        from repro.core import optimize, apply_plan_params
+    plan = None
+    if args.plan is not None:
+        from repro.core import LexiPlan
+        plan = LexiPlan.load(args.plan)
+    elif (args.lexi_budget_frac is not None and cfg.is_moe
+          and cfg.moe_top_k > 1):
+        from repro.core import optimize
         n = cfg.num_moe_layers
         budget = max(n, int(round(args.lexi_budget_frac * n * cfg.moe_top_k)))
         plan = optimize(params, cfg, budget, method="dp", n_iter=4,
                         profile_batch=2, profile_seq=32)
-        cfg_lexi, params = apply_plan_params(params, cfg, plan)
-        print(f"LExI plan (B={budget}): {plan.plan}")
+        if args.save_plan:
+            plan.save(args.save_plan)
+            print(f"saved plan -> {args.save_plan}")
+
+    if plan is not None:
+        eng.add_plan("lexi", plan)      # same runner, same weights
+        print(f"LExI plan (B={plan.budget}): {plan.plan}")
         reqs = synth_requests(args.requests, cfg.vocab_size,
                               max_new=args.max_new, seed=args.seed)
-        _, tput2, stats2 = run_engine(cfg_lexi, params, reqs,
-                                      max_batch=args.max_batch,
-                                      max_len=args.max_len)
-        print(f"LExI:     {tput2:,.1f} tok/s  ({stats2})")
+        eng.serve(reqs, plan="lexi")
+        tput2 = _report("LExI", eng)
         print(f"speedup: {tput2 / tput:.2f}x at "
               f"{plan.active_fraction():.0%} active experts")
     return 0

@@ -1,6 +1,7 @@
 from repro.models.model import (  # noqa: F401
     abstract_caches,
     abstract_params,
+    chunk_prefill_fn,
     decode_fn,
     init_caches,
     init_params,

@@ -2,14 +2,30 @@
 
 Cache convention (per layer)
 ----------------------------
+Contiguous (slot-per-row) layout:
+
 GQA: ``{"k": [B, S_buf, Hkv, hd], "v": [B, S_buf, Hkv, hd], "pos": [B, S_buf]}``
 MLA: ``{"ckv": [B, S_buf, r_kv], "krope": [B, S_buf, dr], "pos": [B, S_buf]}``
+
+Paged (block-table) layout -- a shared pool of fixed-size position pages,
+indexed per sequence through a block table (DESIGN.md §3):
+
+GQA: ``{"kp": [N, P, Hkv, hd], "vp": [N, P, Hkv, hd], "posp": [N, P]}``
+MLA: ``{"ckvp": [N, P, r_kv], "kropep": [N, P, dr], "posp": [N, P]}``
+
+with N pages of P positions each.  A ``block_tables [B, n_blk]`` array maps
+logical block j of sequence b to a physical page; page 0 is a reserved trash
+page (``posp`` stays -1) that unmapped table entries point at, so gather-based
+reads need no validity sideband.  Writes with invalid positions (< 0) are
+routed out of bounds and dropped (``mode="drop"``), which is what lets one
+batched graph serve a mix of active / idle / prefilling slots.
 
 ``pos`` stores the absolute position held in each slot (-1 = empty).  For
 sliding-window attention the buffer is a ring of size ``min(max_len, window)``
 -- slot = position % S_buf -- which is what makes the 500k-token decode cell
 O(window) instead of O(seq).  Masks are always derived from ``pos``, so ring
-wrap-around needs no special cases.
+wrap-around needs no special cases (and carries over unchanged to the paged
+layout, where the ring is simply striped across a sequence's pages).
 
 MLA decode implements both the straightforward ("materialized") path and the
 weight-absorbed path (fold W_kv_b into the query / output projections) so
@@ -118,23 +134,85 @@ def _write_seq(buf, values, positions):
     """Scatter a [B, S, ...] sequence into a ring buffer at positions % S_buf.
 
     Keeps only the last S_buf tokens when S > S_buf (ring semantics).
+    Positions < 0 (pad / idle rows) are routed out of bounds and dropped.
     """
     s_buf = buf.shape[1]
     s = values.shape[1]
     if s > s_buf:
         values = values[:, -s_buf:]
         positions = positions[:, -s_buf:]
-    slots = positions % s_buf                           # [B, S]
+    valid = positions >= 0
+    slots = jnp.where(valid, positions % s_buf, s_buf)  # [B, S]; OOB -> drop
     bidx = jnp.arange(buf.shape[0])[:, None]
-    return buf.at[bidx, slots].set(values.astype(buf.dtype))
+    return buf.at[bidx, slots].set(values.astype(buf.dtype), mode="drop")
 
 
 def _write_step(buf, value, position):
-    """Scatter one token per sample: value [B, ...], position [B]."""
+    """Scatter one token per sample: value [B, ...], position [B].
+
+    Positions < 0 (idle slots) are dropped, so one fixed-width decode graph
+    serves a partially occupied batch without cross-slot clobbering.
+    """
     s_buf = buf.shape[1]
-    slots = position % s_buf                            # [B]
+    valid = position >= 0
+    slots = jnp.where(valid, position % s_buf, s_buf)   # [B]; OOB -> drop
     bidx = jnp.arange(buf.shape[0])
-    return buf.at[bidx, slots].set(value.astype(buf.dtype))
+    return buf.at[bidx, slots].set(value.astype(buf.dtype), mode="drop")
+
+
+# --------------------------------------------------------------------------- #
+# Paged (block-table) cache
+# --------------------------------------------------------------------------- #
+
+TRASH_PAGE = 0  # reserved page unmapped block-table entries point at
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> Dict:
+    """Single-layer paged pool: ``num_pages`` pages of ``page_size`` slots."""
+    dt = activation_dtype(cfg)
+    n, p = num_pages, page_size
+    if cfg.attention == "mla":
+        return {
+            "ckvp": jnp.zeros((n, p, cfg.kv_lora_rank), dt),
+            "kropep": jnp.zeros((n, p, cfg.qk_rope_head_dim), dt),
+            "posp": jnp.full((n, p), -1, jnp.int32),
+        }
+    return {
+        "kp": jnp.zeros((n, p, cfg.num_kv_heads, cfg.head_dim_), dt),
+        "vp": jnp.zeros((n, p, cfg.num_kv_heads, cfg.head_dim_), dt),
+        "posp": jnp.full((n, p), -1, jnp.int32),
+    }
+
+
+def is_paged(cache: Optional[Dict]) -> bool:
+    return cache is not None and "posp" in cache
+
+
+def _paged_write(pages, values, positions, block_tables):
+    """Scatter [B, S, ...] values into a page pool through the block table.
+
+    ``positions`` < 0 are routed out of bounds and dropped; ring semantics
+    (slot = pos % S_buf) fall out of S_buf = n_blk * page_size.
+    """
+    p = pages.shape[1]
+    s_buf = block_tables.shape[1] * p
+    valid = positions >= 0
+    slot = jnp.where(valid, positions, 0) % s_buf       # [B, S]
+    page = jnp.take_along_axis(block_tables, slot // p, axis=1)
+    page = jnp.where(valid, page, pages.shape[0])       # OOB -> drop
+    return pages.at[page, slot % p].set(values.astype(pages.dtype),
+                                        mode="drop")
+
+
+def _paged_read(pages, block_tables):
+    """Gather a sequence view [B, n_blk * P, ...] from the pool (static
+
+    shapes: the gather width is the block-table width, not the live length).
+    Unmapped entries point at the trash page, whose ``posp`` is -1, so the
+    position-derived mask hides them with no extra sideband.
+    """
+    g = jnp.take(pages, block_tables, axis=0)           # [B, n_blk, P, ...]
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
 
 
 # --------------------------------------------------------------------------- #
@@ -294,12 +372,20 @@ def gqa_attention(
     compute_dtype: str = "f32",
     seq_shard_mesh=None,
     use_flash_decode: bool = False,
+    block_tables=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
-    """x [B,S,D]; positions [B,S] (train/prefill) or [B] (decode).
+    """x [B,S,D]; positions [B,S] (train/prefill/chunk) or [B] (decode).
 
     Returns (output [B,S,D], updated cache or None).
     ``kv_override = (k, v, kv_positions)`` implements cross-attention
     (which is rope-free: pass ``rope=False``).
+
+    ``mode="chunk"`` is chunked prefill: write this chunk's K/V into the
+    cache, then attend the chunk queries against the *whole* cache (prior
+    chunks included) -- decode generalized to S query tokens.  Requires
+    ``positions [B, S]`` with -1 marking pad / idle rows.  With a paged
+    cache, ``block_tables [B, n_blk]`` routes both writes and the gathered
+    read.
     """
     if kv_override is not None:
         rope = False
@@ -323,6 +409,9 @@ def gqa_attention(
         if rope:
             q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
         if kv_override is None and seq_shard_mesh is not None:
+            if is_paged(cache):
+                raise NotImplementedError(
+                    "decode_kv_seq_shard requires the contiguous cache layout")
             # context-parallel decode: KV cache seq-sharded over `model`
             if rope:
                 k = apply_rope(k, pos_b[:, None], cfg.rope_theta)
@@ -335,10 +424,20 @@ def gqa_attention(
             if rope:
                 k = apply_rope(k, pos_b[:, None], cfg.rope_theta)
             cache = dict(cache)
-            cache["k"] = _write_step(cache["k"], k[:, 0], pos_b)
-            cache["v"] = _write_step(cache["v"], v[:, 0], pos_b)
-            cache["pos"] = _write_step(cache["pos"], pos_b, pos_b)
-            k_all, v_all, kv_pos = cache["k"], cache["v"], cache["pos"]
+            if is_paged(cache):
+                pos_s = pos_b[:, None]
+                cache["kp"] = _paged_write(cache["kp"], k, pos_s, block_tables)
+                cache["vp"] = _paged_write(cache["vp"], v, pos_s, block_tables)
+                cache["posp"] = _paged_write(cache["posp"], pos_s, pos_s,
+                                             block_tables)
+                k_all = _paged_read(cache["kp"], block_tables)
+                v_all = _paged_read(cache["vp"], block_tables)
+                kv_pos = _paged_read(cache["posp"], block_tables)
+            else:
+                cache["k"] = _write_step(cache["k"], k[:, 0], pos_b)
+                cache["v"] = _write_step(cache["v"], v[:, 0], pos_b)
+                cache["pos"] = _write_step(cache["pos"], pos_b, pos_b)
+                k_all, v_all, kv_pos = cache["k"], cache["v"], cache["pos"]
         else:
             k_all, v_all, kv_pos = k, v, kv_positions
         if use_flash_decode and kv_override is None:
@@ -350,6 +449,38 @@ def gqa_attention(
                               causal)
             out = _sdpa(q, k_all, v_all, bias, 1.0 / (hd ** 0.5),
                         compute_dtype)
+        new_cache = cache
+    elif mode == "chunk":
+        # chunked prefill: attend against the PRE-write cache plus the
+        # in-chunk keys (concatenated), then commit the chunk.  Writing
+        # first would be wrong under a sliding-window ring: the chunk's
+        # writes evict positions still inside the window of the chunk's own
+        # earlier queries.  Attend-then-write also matches whole-prefill
+        # numerics exactly (fresh K/V, not cache-dtype round-trips).
+        if rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        cache = dict(cache)
+        if is_paged(cache):
+            k_old = _paged_read(cache["kp"], block_tables)
+            v_old = _paged_read(cache["vp"], block_tables)
+            pos_old = _paged_read(cache["posp"], block_tables)
+        else:
+            k_old, v_old, pos_old = cache["k"], cache["v"], cache["pos"]
+        k_all = jnp.concatenate([k_old, k.astype(k_old.dtype)], axis=1)
+        v_all = jnp.concatenate([v_old, v.astype(v_old.dtype)], axis=1)
+        kv_pos = jnp.concatenate([pos_old, positions], axis=1)
+        bias = _mask_bias(positions, kv_pos, cfg.sliding_window, causal)
+        out = _sdpa(q, k_all, v_all, bias, 1.0 / (hd ** 0.5), compute_dtype)
+        if is_paged(cache):
+            cache["kp"] = _paged_write(cache["kp"], k, positions, block_tables)
+            cache["vp"] = _paged_write(cache["vp"], v, positions, block_tables)
+            cache["posp"] = _paged_write(cache["posp"], positions, positions,
+                                         block_tables)
+        else:
+            cache["k"] = _write_seq(cache["k"], k, positions)
+            cache["v"] = _write_seq(cache["v"], v, positions)
+            cache["pos"] = _write_seq(cache["pos"], positions, positions)
         new_cache = cache
     else:
         if rope:
@@ -421,22 +552,36 @@ def mla_attention(
     mode: str = "train",
     cache: Optional[Dict] = None,
     absorb: bool = True,
+    block_tables=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style)."""
     b, s, _ = x.shape
     scale = 1.0 / ((cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** 0.5)
 
-    if mode == "decode":
-        pos_b = positions                              # [B]
-        q_nope, q_rope = _mla_q(params, cfg, x)        # [B,1,H,dn],[B,1,H,dr]
-        q_rope = apply_rope(q_rope, pos_b[:, None], cfg.rope_theta)
-        ckv_t, krope_t = _mla_latents(params, cfg, x, pos_b[:, None])
+    if mode in ("decode", "chunk"):
+        # decode is the S=1 special case of chunked prefill: same cache
+        # write + attend-against-everything math, the einsums keep S symbolic
+        q_pos = positions[:, None] if mode == "decode" else positions  # [B,S]
+        q_nope, q_rope = _mla_q(params, cfg, x)        # [B,S,H,dn],[B,S,H,dr]
+        q_rope = apply_rope(q_rope, q_pos, cfg.rope_theta)
+        ckv_t, krope_t = _mla_latents(params, cfg, x, q_pos)
         cache = dict(cache)
-        cache["ckv"] = _write_step(cache["ckv"], ckv_t[:, 0], pos_b)
-        cache["krope"] = _write_step(cache["krope"], krope_t[:, 0], pos_b)
-        cache["pos"] = _write_step(cache["pos"], pos_b, pos_b)
-        ckv, krope, kv_pos = cache["ckv"], cache["krope"], cache["pos"]
-        bias = _mask_bias(pos_b[:, None], kv_pos, None, True)  # [B,1,1,Sk]
+        if is_paged(cache):
+            cache["ckvp"] = _paged_write(cache["ckvp"], ckv_t, q_pos,
+                                         block_tables)
+            cache["kropep"] = _paged_write(cache["kropep"], krope_t, q_pos,
+                                           block_tables)
+            cache["posp"] = _paged_write(cache["posp"], q_pos, q_pos,
+                                         block_tables)
+            ckv = _paged_read(cache["ckvp"], block_tables)
+            krope = _paged_read(cache["kropep"], block_tables)
+            kv_pos = _paged_read(cache["posp"], block_tables)
+        else:
+            cache["ckv"] = _write_seq(cache["ckv"], ckv_t, q_pos)
+            cache["krope"] = _write_seq(cache["krope"], krope_t, q_pos)
+            cache["pos"] = _write_seq(cache["pos"], q_pos, q_pos)
+            ckv, krope, kv_pos = cache["ckv"], cache["krope"], cache["pos"]
+        bias = _mask_bias(q_pos, kv_pos, None, True)   # [B,1,Sq,Sk]
 
         wk_b, wv_b = _wkv_b_split(params, cfg)
         if absorb:

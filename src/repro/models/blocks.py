@@ -87,6 +87,7 @@ def apply_block(
     cache: Optional[Dict],
     mesh=None,
     opts: ModelOpts = DEFAULT_OPTS,
+    block_tables=None,
 ):
     """Returns (x, new_cache, aux_loss)."""
     if mesh is not None and opts.act_constraint:
@@ -99,12 +100,16 @@ def apply_block(
             x, NamedSharding(mesh, batch_spec(x.shape, mesh)))
     aux = jnp.zeros((), jnp.float32)
     if spec.kind == "mamba":
+        if mode == "chunk":
+            raise NotImplementedError(
+                "chunked prefill needs conv/state carry across chunks; "
+                "mamba blocks use whole-prompt prefill (serving/runner.py)")
         h, new_cache = ssm_mod.mamba_forward(
             params["mixer"], cfg, apply_norm(params["norm1"], cfg, x),
             mode=mode, cache=cache)
         return x + h, new_cache, aux
 
-    attn_kw = {}
+    attn_kw = {"block_tables": block_tables}
     if cfg.attention == "mla":
         attn_kw["absorb"] = opts.mla_absorb
     else:
@@ -157,12 +162,20 @@ def init_stack(key, cfg: ModelConfig) -> Dict:
     return out
 
 
-def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int):
-    """Cache pytree aligned with groups (None entries in train mode)."""
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     layout: str = "contiguous", page_size: int = 16,
+                     num_pages: int = 0):
+    """Cache pytree aligned with groups (None entries in train mode).
+
+    ``layout="paged"`` builds per-layer page pools instead of per-slot rows
+    (attention blocks only -- mamba state has no position dim to page).
+    """
     caches = []
     for g in group_pattern(cfg.pattern()):
         if g.spec.kind == "mamba":
             one = ssm_mod.init_mamba_cache(cfg, batch)
+        elif layout == "paged":
+            one = attn_mod.init_paged_cache(cfg, num_pages, page_size)
         else:
             one = attn_mod.init_cache(cfg, batch, max_len)
         if g.count == 1:
@@ -183,6 +196,7 @@ def apply_stack(
     caches=None,
     mesh=None,
     opts: ModelOpts = DEFAULT_OPTS,
+    block_tables=None,
 ):
     """Run all layer groups.  Returns (x, new_caches, total_aux)."""
     groups = group_pattern(cfg.pattern())
@@ -198,7 +212,8 @@ def apply_stack(
 
         def one_layer(p_layer, xx, c_layer, spec=g.spec):
             fn = partial(apply_block, cfg=cfg, spec=spec, positions=positions,
-                         mode=mode, mesh=mesh, opts=opts)
+                         mode=mode, mesh=mesh, opts=opts,
+                         block_tables=block_tables)
             if opts.remat != "none" and mode == "train":
                 fn = _remat(fn, opts)
             return fn(p_layer, x=xx, cache=c_layer)

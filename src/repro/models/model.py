@@ -42,14 +42,22 @@ def loss_fn(params, cfg: ModelConfig, batch, *, mesh=None,
     return tf_mod.lm_loss(params, cfg, batch, mesh=mesh, opts=opts)
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
+                layout: str = "contiguous", page_size: int = 16,
+                num_pages: int = 0):
+    """Cache pytree.  ``layout="paged"`` builds block-table page pools of
+    ``num_pages`` x ``page_size`` positions per attention layer (serving);
+    the default contiguous layout is the per-slot-row equivalence oracle."""
     if cfg.is_encoder_decoder:
+        if layout != "contiguous":
+            raise NotImplementedError("paged KV is decoder-only LM for now")
         return encdec_mod.init_encdec_caches(cfg, batch, max_len)
-    return tf_mod.init_caches(cfg, batch, max_len)
+    return tf_mod.init_caches(cfg, batch, max_len, layout=layout,
+                              page_size=page_size, num_pages=num_pages)
 
 
-def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
-    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int, **kw):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len, **kw))
 
 
 def prefill_fn(params, cfg: ModelConfig, batch, caches, *, mesh=None,
@@ -66,12 +74,24 @@ def prefill_fn(params, cfg: ModelConfig, batch, caches, *, mesh=None,
 
 
 def decode_fn(params, cfg: ModelConfig, tokens, pos, caches, *, mesh=None,
-              opts: ModelOpts = DEFAULT_OPTS):
+              opts: ModelOpts = DEFAULT_OPTS, block_tables=None):
     if cfg.is_encoder_decoder:
         return encdec_mod.encdec_decode_step(params, cfg, tokens, pos, caches,
                                              mesh=mesh, opts=opts)
     return tf_mod.decode_step(params, cfg, tokens, pos, caches,
-                              mesh=mesh, opts=opts)
+                              mesh=mesh, opts=opts, block_tables=block_tables)
+
+
+def chunk_prefill_fn(params, cfg: ModelConfig, tokens, positions, caches, *,
+                     last_index=None, block_tables=None, mesh=None,
+                     opts: ModelOpts = DEFAULT_OPTS):
+    """One fixed-width chunked-prefill step (decoder-only LMs)."""
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError("chunked prefill is decoder-only LM for now")
+    return tf_mod.chunk_prefill(params, cfg, tokens, caches,
+                                positions=positions, last_index=last_index,
+                                block_tables=block_tables, mesh=mesh,
+                                opts=opts)
 
 
 # --------------------------------------------------------------------------- #

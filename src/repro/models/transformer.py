@@ -72,8 +72,9 @@ def forward(
     prefix_embeds=None,
     mesh=None,
     opts: ModelOpts = DEFAULT_OPTS,
+    block_tables=None,
 ):
-    """tokens [B,S]; positions [B,S] (train/prefill) or [B] (decode).
+    """tokens [B,S]; positions [B,S] (train/prefill/chunk) or [B] (decode).
 
     Returns (hidden [B,S,D], new_caches, aux_loss).
     """
@@ -83,7 +84,7 @@ def forward(
         x = jnp.concatenate([pre, x], axis=1)
     x, new_caches, aux = blocks_mod.apply_stack(
         params["stack"], cfg, x, positions, mode=mode, caches=caches,
-        mesh=mesh, opts=opts)
+        mesh=mesh, opts=opts, block_tables=block_tables)
     return x, new_caches, aux
 
 
@@ -130,8 +131,12 @@ def lm_loss(
 # --------------------------------------------------------------------------- #
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int):
-    return blocks_mod.init_stack_cache(cfg, batch, max_len)
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
+                layout: str = "contiguous", page_size: int = 16,
+                num_pages: int = 0):
+    return blocks_mod.init_stack_cache(cfg, batch, max_len, layout=layout,
+                                       page_size=page_size,
+                                       num_pages=num_pages)
 
 
 def prefill(
@@ -162,6 +167,38 @@ def prefill(
     return logits, caches
 
 
+def chunk_prefill(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens,        # [B, C] one fixed-width chunk per slot
+    caches,
+    *,
+    positions,     # [B, C] absolute positions; -1 = pad / idle row
+    last_index=None,   # [B] in-chunk index of each row's final prompt token
+    block_tables=None,
+    mesh=None,
+    opts: ModelOpts = DEFAULT_OPTS,
+):
+    """One chunked-prefill step over all slots.  Returns (logits [B,V], caches).
+
+    Every prompt runs through the same ``[B, C]`` graph regardless of its
+    length: the chunk's K/V are committed to the cache, then the chunk
+    queries attend against the whole cache (prior chunks included).  The
+    returned logits are taken at ``last_index`` per row (clipped, so rows
+    that have not finished their prompt return ignorable values).
+    """
+    hidden, caches, _ = forward(params, cfg, tokens, positions, mode="chunk",
+                                caches=caches, mesh=mesh, opts=opts,
+                                block_tables=block_tables)
+    if last_index is None:
+        sel = hidden[:, -1]
+    else:
+        idx = jnp.clip(last_index, 0, hidden.shape[1] - 1)
+        sel = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)[:, 0]
+    logits = lm_logits(params, cfg, sel[:, None])[:, 0]
+    return logits, caches
+
+
 def decode_step(
     params: Dict,
     cfg: ModelConfig,
@@ -171,9 +208,11 @@ def decode_step(
     *,
     mesh=None,
     opts: ModelOpts = DEFAULT_OPTS,
+    block_tables=None,
 ):
     """One decode step.  Returns (logits [B,V] f32, updated caches)."""
     hidden, caches, _ = forward(params, cfg, tokens[:, None], pos, mode="decode",
-                                caches=caches, mesh=mesh, opts=opts)
+                                caches=caches, mesh=mesh, opts=opts,
+                                block_tables=block_tables)
     logits = lm_logits(params, cfg, hidden)[:, 0]
     return logits, caches

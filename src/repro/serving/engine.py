@@ -1,24 +1,28 @@
-"""Batched serving engine with continuous batching and LExI-planned decode.
+"""Serving engine facade: Scheduler -> KVCache -> ModelRunner composition.
 
-The engine owns a slot-batched KV cache (``max_batch`` slots, ``max_len``
-positions).  Requests are admitted into free slots as they open (continuous
-batching "lite" -- the vLLM scheduling idea mapped onto static XLA shapes):
+The engine is deliberately thin (DESIGN.md §3): the **Scheduler** owns
+admission policy and request lifecycle, the **KVCache** owns device cache
+memory (paged block-table pool by default, contiguous oracle behind
+``cache_layout=``), and the **ModelRunner** owns the weights plus the
+compiled-specialization table.  The facade composes one step of each per
+iteration:
 
-  * ``prefill`` runs per-admission on a [1, padded_prompt] graph and its
-    cache is scattered into the slot;
-  * one jitted ``decode`` step advances every active slot per iteration;
-  * finished sequences (eos / budget) free their slot immediately.
+    admit -> one [B, chunk] chunked-prefill step -> one [B] decode step
 
-A ``ModelConfig`` carrying a LExI plan serves with per-layer top-k: the plan
-changes *static* dispatch shapes, so one engine instance == one compiled
-specialization (DESIGN.md §1 -- this is the TPU-native version of the paper's
-vLLM integration).
+so every prompt, whatever its length, runs through a single fixed-width
+prefill graph, concurrent prefills batch together, and decode advances all
+live slots at once.  Stacks with mamba blocks (no position dim to page or
+chunk) transparently fall back to the contiguous layout with per-request
+whole-prompt prefill.
+
+``Engine(cfg, params).serve(reqs)`` is unchanged from the monolith it
+replaced; ``serve(reqs, plan="name")`` after ``add_plan`` serves a LExI
+plan from the same runner and weights.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -27,186 +31,269 @@ import numpy as np
 
 from repro import models
 from repro.configs.base import ModelConfig
+from repro.models.attention import cache_buf_len
 from repro.models.opts import DEFAULT_OPTS, ModelOpts
-from repro.serving.sampling import sample, sample_per_slot
+from repro.serving.kv_cache import KVCache
+from repro.serving.request import Request, Result
+from repro.serving.runner import BASE_PLAN, ModelRunner
+from repro.serving.sampling import sample_per_slot
+from repro.serving.scheduler import DECODE, DONE, PREFILL, Scheduler, Tracked
+
+_CHUNKABLE_KINDS = ("attn_mlp", "attn_moe", "shared_attn")
 
 
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                  # [L] int32
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-
-
-@dataclass
-class Result:
-    uid: int
-    tokens: List[int] = field(default_factory=list)
-    prompt_len: int = 0
-    finished_reason: str = ""
+def _supports_paging(cfg: ModelConfig) -> bool:
+    return (not cfg.is_encoder_decoder
+            and all(b.kind in _CHUNKABLE_KINDS for b in cfg.pattern()))
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_len: int = 512, prefill_pad: int = 64,
+                 prefill_chunk: Optional[int] = None,
+                 cache_layout: Optional[str] = None,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 scheduler: str = "fifo", truncate_prompts: bool = False,
                  eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
                  mesh=None, seed: int = 0):
-        self.cfg = cfg
-        self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.prefill_pad = prefill_pad
         self.eos_id = eos_id
-        self.opts = opts
-        self.mesh = mesh
+        self.truncate_prompts = truncate_prompts
         self.key = jax.random.PRNGKey(seed)
 
-        self.caches = models.init_caches(cfg, max_batch, max_len)
-        self.slot_pos = np.zeros(max_batch, np.int32)       # next position
-        self.slot_req: List[Optional[Result]] = [None] * max_batch
+        pageable = _supports_paging(cfg)
+        if cache_layout is None:
+            cache_layout = "paged" if pageable else "contiguous"
+        if cache_layout == "paged" and not pageable:
+            raise ValueError(
+                f"{cfg.name}: paged KV / chunked prefill need an "
+                "attention-only stack; use cache_layout='contiguous'")
+        if prefill_chunk is not None and prefill_chunk > 0 and not pageable:
+            raise ValueError(f"{cfg.name}: chunked prefill needs an "
+                             "attention-only stack")
+        # prefill_chunk=0 forces the legacy whole-prompt [1, L] prefill
+        # (jit per padded length; contiguous layout only)
+        self.chunked = pageable and prefill_chunk != 0
+        if cache_layout == "paged" and not self.chunked:
+            raise ValueError("whole-prompt prefill (prefill_chunk=0) writes "
+                             "through slot scatter; use cache_layout="
+                             "'contiguous'")
+        # cap at the ring size: a chunk wider than the window would scatter
+        # two positions into one ring slot within a single write
+        self.prefill_chunk = (min(prefill_chunk or prefill_pad,
+                                  cache_buf_len(cfg, max_len))
+                              if self.chunked else 0)
+
+        self.runner = ModelRunner(cfg, params, mesh=mesh, opts=opts)
+        self.plan_name = BASE_PLAN
+        self._kv_kw = dict(layout=cache_layout, page_size=page_size,
+                           num_pages=num_pages)
+        self.kv = KVCache(cfg, max_batch, max_len, **self._kv_kw)
+        self.sched = Scheduler(max_batch, policy=scheduler)
+
+        self.slot_pos = np.full(max_batch, -1, np.int32)    # next write pos
+        self.slot_last = np.zeros(max_batch, np.int32)      # last sampled tok
         self.slot_budget = np.zeros(max_batch, np.int32)
         self.slot_temp = np.zeros(max_batch, np.float32)
-        self.slot_last = np.zeros(max_batch, np.int32)      # last sampled token
-        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0}
-        self._finished_in_admit: List[Result] = []
-
-        self._decode = jax.jit(
-            lambda p, t, pos, c: models.decode_fn(p, cfg, t, pos, c,
-                                                  mesh=mesh, opts=opts))
-        self._prefills: Dict[int, any] = {}
+        self.stats: Dict[str, float] = {"prefill_tokens": 0,
+                                        "decode_tokens": 0, "steps": 0}
 
     # ------------------------------------------------------------------ #
-    # internals
+    # Plans
     # ------------------------------------------------------------------ #
-    def _prefill_fn(self, plen: int):
-        if plen not in self._prefills:
-            def fn(p, tokens, positions, caches):
-                return models.prefill_fn(
-                    p, self.cfg, {"tokens": tokens, "positions": positions},
-                    caches, mesh=self.mesh, opts=self.opts)
-            self._prefills[plen] = jax.jit(fn)
-        return self._prefills[plen]
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.runner.cfg_for(self.plan_name)
 
-    def _scatter_cache(self, slot: int, one_cache, pad_start: int):
-        """Write a 1-slot cache into batch slot ``slot`` (per-leaf batch dim).
+    def add_plan(self, name: str, plan) -> ModelConfig:
+        """Register a LExI plan; weights stay shared with the base config."""
+        return self.runner.add_plan(name, plan)
 
-        Positions < ``pad_start`` (the left padding of the prompt window) are
-        marked -1 in the ``pos`` buffers so attention never sees pad tokens --
-        conditioning is exact for attention archs.  SSM states have no
-        position mask; pure-SSM archs condition on the (token-0) pad prefix
-        unless prompts are sized to ``prefill_pad`` (documented).
-        """
-        from repro.sharding.rules import _CACHE_RANKS, _path_str
+    def set_plan(self, name: str) -> None:
+        """Switch the serving specialization (between workloads only).
 
-        def write(path, full, one):
-            ps = _path_str(path)
-            base = next((r for rx, r in _CACHE_RANKS if rx.search(ps)), None)
-            if base is None:
-                return full
-            if ps.endswith("pos") and pad_start > 0:
-                one = jnp.where((one >= 0) & (one < pad_start), -1, one)
-            bdim = full.ndim - base
-            idx = tuple([slice(None)] * bdim + [slice(slot, slot + 1)])
-            return full.at[idx].set(one.astype(full.dtype))
+        The weights are untouched; the KV pool is rebuilt empty only when
+        the plan's layer grouping actually changes the cache pytree (the
+        pool is drained between workloads, so reuse is safe otherwise)."""
+        if name == self.plan_name:
+            return
+        if not self.sched.done():
+            raise RuntimeError("cannot switch plans with requests in flight")
+        old_cfg = self.cfg
+        self.plan_name = name
+        new_cfg = self.runner.cfg_for(name)
+        if self._cache_shape(old_cfg) != self._cache_shape(new_cfg):
+            self.kv = KVCache(new_cfg, self.max_batch, self.max_len,
+                              **self._kv_kw)
 
-        self.caches = jax.tree_util.tree_map_with_path(write, self.caches,
-                                                       one_cache)
-
-    def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+    @staticmethod
+    def _cache_shape(cfg: ModelConfig):
+        """Cache-pytree fingerprint: group sizes + kinds (k doesn't matter)."""
+        from repro.models.blocks import group_pattern
+        return tuple((g.count, g.spec.kind)
+                     for g in group_pattern(cfg.pattern()))
 
     # ------------------------------------------------------------------ #
-    # public API
+    # Submission
     # ------------------------------------------------------------------ #
-    def admit(self, req: Request) -> bool:
-        free = self._free_slots()
-        if not free:
-            return False
-        slot = free[0]
-        plen = len(req.prompt)
-        pad = ((plen + self.prefill_pad - 1) // self.prefill_pad
-               ) * self.prefill_pad
-        pad = min(pad, self.max_len)
+    def _submit(self, req: Request) -> Tracked:
+        t = self.sched.submit(req)
+        limit = self.max_len - 1
+        if t.prompt_len == 0:
+            self.sched.reject(t, "rejected_empty_prompt")
+        elif t.prompt_len > limit:
+            if self.truncate_prompts:
+                t.prompt = t.prompt[-limit:]
+                t.result.truncated = True
+                t.result.prompt_len = limit
+            else:
+                self.sched.reject(t, "rejected_prompt_too_long")
+        if (t.state != DONE
+                and not self.kv.fits_ever(t.prompt_len
+                                          + t.req.max_new_tokens)):
+            self.sched.reject(t, "rejected_kv_capacity")
+        return t
+
+    # ------------------------------------------------------------------ #
+    # Step phases
+    # ------------------------------------------------------------------ #
+    def _admit(self) -> None:
+        def can_allocate(slot: int, t: Tracked) -> bool:
+            return self.kv.allocate(slot, t.prompt_len + t.req.max_new_tokens)
+
+        for t in self.sched.admit(can_allocate):
+            self.slot_temp[t.slot] = t.req.temperature
+            self.slot_budget[t.slot] = t.req.max_new_tokens
+            self.slot_pos[t.slot] = -1
+            if not self.chunked:
+                self._whole_prefill(t)
+
+    def _first_token(self, t: Tracked, tok: int) -> None:
+        """Account the prefill-sampled token; it may already terminate."""
+        self.sched.record_token(t, tok)
+        self.slot_budget[t.slot] -= 1
+        done_eos = self.eos_id is not None and tok == self.eos_id
+        if done_eos or self.slot_budget[t.slot] <= 0:
+            self._finish(t, "eos" if done_eos else "length")
+        else:
+            t.state = DECODE
+            self.slot_pos[t.slot] = t.prompt_len
+            self.slot_last[t.slot] = tok
+
+    def _finish(self, t: Tracked, reason: str) -> None:
+        slot = t.slot
+        self.sched.finish(t, reason)
+        self.kv.release(slot)
+        self.slot_pos[slot] = -1
+
+    def _whole_prefill(self, t: Tracked) -> None:
+        """Legacy [1, padded_len] prefill + slot scatter (mamba fallback)."""
+        plen = t.prompt_len
+        pad = min(-(-plen // self.prefill_pad) * self.prefill_pad,
+                  self.max_len)
         tokens = np.zeros((1, pad), np.int32)
-        tokens[0, -plen:] = req.prompt                       # right-aligned
-        # pad tokens get position -1 (attention-masked); prompt gets 0..plen-1
+        tokens[0, -plen:] = t.prompt                        # right-aligned
         positions = np.full((1, pad), -1, np.int32)
         positions[0, -plen:] = np.arange(plen)
         one_cache = models.init_caches(self.cfg, 1, self.max_len)
-        logits, one_cache = self._prefill_fn(pad)(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            one_cache)
-        self._scatter_cache(slot, one_cache, 0)
-
-        res = Result(uid=req.uid, prompt_len=plen)
-        self.slot_req[slot] = res
-        self.slot_pos[slot] = plen
-        self.slot_budget[slot] = req.max_new_tokens
-        self.slot_temp[slot] = req.temperature
-        self.key, sub = jax.random.split(self.key)
-        first = sample(logits, sub, temperature=req.temperature)
-        tok = int(first[0])
-        self.slot_last[slot] = tok
-        res.tokens.append(tok)
-        self.slot_budget[slot] -= 1
+        logits, one_cache = self.runner.whole_prefill(
+            jnp.asarray(tokens), jnp.asarray(positions), one_cache,
+            plan=self.plan_name)
+        self.kv.scatter_slot(one_cache, t.slot)
         self.stats["prefill_tokens"] += plen
-        # the prefill-sampled token may already terminate the request
-        if (self.eos_id is not None and tok == self.eos_id) \
-                or self.slot_budget[slot] <= 0:
-            res.finished_reason = ("eos" if self.eos_id is not None
-                                   and tok == self.eos_id else "length")
-            self.slot_req[slot] = None
-            self._finished_in_admit.append(res)
-        return True
-
-    def step(self) -> List[Result]:
-        """One decode step over all active slots; returns finished results."""
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return []
-        tokens = jnp.asarray(self.slot_last)
-        pos = jnp.asarray(self.slot_pos)
-        logits, self.caches = self._decode(self.params, tokens, pos,
-                                           self.caches)
+        t.consumed = plen
         self.key, sub = jax.random.split(self.key)
-        # per-slot temperature: one hot request must not make concurrent
-        # greedy requests stochastic
+        nxt = np.asarray(sample_per_slot(
+            logits, sub, jnp.asarray([t.req.temperature], jnp.float32)))
+        self._first_token(t, int(nxt[0]))
+
+    def _chunk_prefill_step(self, prefilling: List[Tracked]) -> None:
+        """Advance every prefilling slot by one fixed-width chunk."""
+        c = self.prefill_chunk
+        tokens = np.zeros((self.max_batch, c), np.int32)
+        positions = np.full((self.max_batch, c), -1, np.int32)
+        last_idx = np.zeros(self.max_batch, np.int32)
+        finishing: List[Tracked] = []
+        for t in prefilling:
+            n = min(c, t.prompt_len - t.consumed)
+            tokens[t.slot, :n] = t.prompt[t.consumed:t.consumed + n]
+            positions[t.slot, :n] = np.arange(t.consumed, t.consumed + n)
+            t.consumed += n
+            self.stats["prefill_tokens"] += n
+            if t.consumed == t.prompt_len:
+                last_idx[t.slot] = n - 1
+                finishing.append(t)
+        logits, self.kv.caches = self.runner.chunk_prefill(
+            jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(last_idx), self.kv.caches, self.kv.block_tables(),
+            plan=self.plan_name)
+        if finishing:
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(sample_per_slot(logits, sub,
+                                             jnp.asarray(self.slot_temp)))
+            for t in finishing:
+                self._first_token(t, int(nxt[t.slot]))
+
+    def _decode_step(self, decoding: List[Tracked]) -> None:
+        tokens = np.zeros(self.max_batch, np.int32)
+        pos = np.full(self.max_batch, -1, np.int32)
+        for t in decoding:
+            tokens[t.slot] = self.slot_last[t.slot]
+            pos[t.slot] = self.slot_pos[t.slot]
+        logits, self.kv.caches = self.runner.decode(
+            jnp.asarray(tokens), jnp.asarray(pos), self.kv.caches,
+            self.kv.block_tables(), plan=self.plan_name)
+        self.key, sub = jax.random.split(self.key)
         nxt = np.asarray(sample_per_slot(logits, sub,
                                          jnp.asarray(self.slot_temp)))
         self.stats["steps"] += 1
-
-        finished: List[Result] = []
-        for i in active:
-            self.slot_pos[i] += 1
-            tok = int(nxt[i])
-            res = self.slot_req[i]
-            res.tokens.append(tok)
-            self.slot_last[i] = tok
-            self.slot_budget[i] -= 1
+        for t in decoding:
+            self.slot_pos[t.slot] += 1
+            tok = int(nxt[t.slot])
+            self.sched.record_token(t, tok)
+            self.slot_last[t.slot] = tok
+            self.slot_budget[t.slot] -= 1
             self.stats["decode_tokens"] += 1
             done_eos = self.eos_id is not None and tok == self.eos_id
-            done_len = (self.slot_budget[i] <= 0
-                        or self.slot_pos[i] >= self.max_len - 1)
+            done_len = (self.slot_budget[t.slot] <= 0
+                        or self.slot_pos[t.slot] >= self.max_len - 1)
             if done_eos or done_len:
-                res.finished_reason = "eos" if done_eos else "length"
-                finished.append(res)
-                self.slot_req[i] = None
-        return finished
+                self._finish(t, "eos" if done_eos else "length")
 
-    def serve(self, requests: Sequence[Request]) -> List[Result]:
-        """Run a full workload with continuous batching; returns all results."""
-        pending = list(requests)
-        done: List[Result] = []
+    def _step(self) -> None:
+        self._admit()
+        prefilling = self.sched.in_state(PREFILL)
+        if prefilling:
+            self._chunk_prefill_step(prefilling)
+        decoding = self.sched.in_state(DECODE)
+        if decoding:
+            self._decode_step(decoding)
+
+    # ------------------------------------------------------------------ #
+    # Public API
+    # ------------------------------------------------------------------ #
+    def serve(self, requests: Sequence[Request], *,
+              plan: Optional[str] = None) -> List[Result]:
+        """Run a full workload with continuous batching; returns all results.
+
+        Throughput counters and latency percentiles are per-serve (reset at
+        entry).  ``plan=`` selects a registered LExI specialization;
+        omitting it serves the base config (a previous serve's plan does
+        not stick).
+        """
+        self.set_plan(plan if plan is not None else BASE_PLAN)
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0}
+        self.sched.finished.clear()     # records are per-workload: a
+        # long-lived engine must not accumulate every past prompt/result
+        batch = [self._submit(r) for r in requests]
         t0 = time.time()
-        while pending or any(r is not None for r in self.slot_req):
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
-            done.extend(self._finished_in_admit)
-            self._finished_in_admit.clear()
-            done.extend(self.step())
+        while not self.sched.done():
+            self._step()
         self.stats["wall_s"] = time.time() - t0
-        return sorted(done, key=lambda r: r.uid)
+        self.stats.update(self.sched.percentiles(batch))
+        return sorted((t.result for t in batch), key=lambda r: r.uid)
 
     def throughput(self) -> float:
         """Tokens (prompt + generated) per second over the last serve()."""

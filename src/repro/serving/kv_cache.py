@@ -1,0 +1,194 @@
+"""KV cache manager: paged block-table pool with a contiguous oracle.
+
+The manager owns the device-side cache pytree plus the host-side block
+accounting (DESIGN.md §3).  Two layouts behind one interface:
+
+``paged``
+    Per-attention-layer pools of ``num_pages`` fixed-size position pages.
+    A slot's logical block j maps to a physical page through
+    ``table[slot, j]``; pages are handed out at admission, recycled on
+    release, and their ``posp`` entries reset to -1 so a recycled page can
+    never leak a previous request's mask state.  Device memory scales with
+    the pool size (live tokens), not ``max_batch x max_len``.
+
+``contiguous``
+    The classic per-slot-row cache -- kept as the token-exact equivalence
+    oracle and as the only layout mamba state supports (no position dim).
+
+Admission reserves a request's full worst-case page need up front
+(prompt + max_new tokens), so an admitted request can always run to
+completion -- preemption is a later PR's problem.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.models.attention import TRASH_PAGE, cache_buf_len
+from repro.sharding.rules import _CACHE_RANKS, _path_str
+
+
+def _pos_leaf_indexer(leaf, base_rank: int):
+    """Leading extra dims (stacked layer groups) as full slices."""
+    return (slice(None),) * (leaf.ndim - base_rank)
+
+
+class KVCache:
+    """Owns cache arrays + block tables for up to ``max_batch`` sequences."""
+
+    def __init__(self, cfg: ModelConfig, max_batch: int, max_len: int, *,
+                 layout: str = "paged", page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        if layout not in ("paged", "contiguous"):
+            raise ValueError(f"unknown cache layout {layout!r}")
+        self.cfg = cfg
+        self.layout = layout
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.s_buf = cache_buf_len(cfg, max_len)
+        self.stats = {"pages_in_use": 0, "pages_peak": 0}
+        if layout == "paged":
+            self.page_size = page_size
+            self.blocks_per_slot = -(-self.s_buf // page_size)
+            full = max_batch * self.blocks_per_slot
+            # +1 for the reserved trash page unmapped table entries point at
+            # (requests the pool can never hold are rejected via fits_ever)
+            self.num_pages = (num_pages if num_pages is not None else full) + 1
+            self.caches = models.init_caches(
+                cfg, max_batch, max_len, layout="paged",
+                page_size=page_size, num_pages=self.num_pages)
+            self._free: List[int] = list(range(self.num_pages - 1, TRASH_PAGE,
+                                               -1))
+            self.table = np.full((max_batch, self.blocks_per_slot),
+                                 TRASH_PAGE, np.int32)
+            self._owned: List[List[int]] = [[] for _ in range(max_batch)]
+            self._table_dev = None      # device copy, refreshed lazily
+        else:
+            self.caches = models.init_caches(cfg, max_batch, max_len)
+
+    # ------------------------------------------------------------------ #
+    # Capacity accounting
+    # ------------------------------------------------------------------ #
+    def pages_needed(self, total_tokens: int) -> int:
+        """Worst-case pages for a request touching ``total_tokens`` positions
+        (ring semantics cap it at one full buffer)."""
+        if self.layout != "paged":
+            return 0
+        return -(-min(total_tokens, self.s_buf) // self.page_size)
+
+    def free_pages(self) -> int:
+        return len(self._free) if self.layout == "paged" else 1 << 30
+
+    def fits_ever(self, total_tokens: int) -> bool:
+        """Could this request ever be admitted (even on an empty pool)?"""
+        if self.layout != "paged":
+            return True
+        return self.pages_needed(total_tokens) <= self.num_pages - 1
+
+    # ------------------------------------------------------------------ #
+    # Slot lifecycle
+    # ------------------------------------------------------------------ #
+    def allocate(self, slot: int, total_tokens: int) -> bool:
+        """Reserve pages for a request's whole lifetime; False if pool full."""
+        if self.layout != "paged":
+            self._clear_contiguous_slot(slot)
+            return True
+        need = self.pages_needed(total_tokens)
+        if need > len(self._free):
+            return False
+        assert not self._owned[slot], f"slot {slot} already allocated"
+        pages = [self._free.pop() for _ in range(need)]
+        self._owned[slot] = pages
+        self.table[slot, :need] = pages
+        self._table_dev = None
+        self.stats["pages_in_use"] += need
+        self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                       self.stats["pages_in_use"])
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return a finished slot's pages to the pool (paged) / clear the
+        slot row's position mask (contiguous)."""
+        if self.layout != "paged":
+            self._clear_contiguous_slot(slot)
+            return
+        pages = self._owned[slot]
+        if not pages:
+            return
+        self._reset_pages(pages)
+        self._free.extend(reversed(pages))
+        self.stats["pages_in_use"] -= len(pages)
+        self._owned[slot] = []
+        self.table[slot] = TRASH_PAGE
+        self._table_dev = None
+
+    def block_tables(self):
+        """Device block-table array for the jitted step (None if contiguous).
+
+        Cached between allocate()/release() calls so steady-state decode
+        steps don't pay a host-to-device transfer each iteration."""
+        if self.layout != "paged":
+            return None
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self.table)
+        return self._table_dev
+
+    # ------------------------------------------------------------------ #
+    # Device-side hygiene
+    # ------------------------------------------------------------------ #
+    def _reset_pages(self, pages: List[int]) -> None:
+        """posp = -1 on recycled pages so stale entries can't pass the mask."""
+        idx = np.asarray(pages, np.int32)
+
+        def reset(path, leaf):
+            if _path_str(path).endswith("posp"):
+                lead = _pos_leaf_indexer(leaf, 2)
+                return leaf.at[lead + (idx,)].set(-1)
+            return leaf
+
+        self.caches = jax.tree_util.tree_map_with_path(reset, self.caches)
+
+    def _clear_contiguous_slot(self, slot: int) -> None:
+        """pos = -1 on a recycled slot row (k/v bytes are masked by pos)."""
+
+        def reset(path, leaf):
+            ps = _path_str(path)
+            if ps.endswith("pos") or ps.endswith("xpos"):
+                lead = _pos_leaf_indexer(leaf, 2)
+                return leaf.at[lead + (slot,)].set(-1)
+            return leaf
+
+        self.caches = jax.tree_util.tree_map_with_path(reset, self.caches)
+
+    # ------------------------------------------------------------------ #
+    # Whole-prompt prefill support (mamba / legacy path)
+    # ------------------------------------------------------------------ #
+    def scatter_slot(self, one_cache, slot: int, pad_start: int = 0) -> None:
+        """Write a 1-slot cache into batch slot ``slot`` (contiguous only).
+
+        Used by the whole-prompt prefill fallback for stacks the chunked
+        path cannot serve (mamba conv/SSM state has no position dim).
+        Positions < ``pad_start`` are marked -1 so attention never sees the
+        prompt window's left padding.
+        """
+        assert self.layout == "contiguous", "scatter is a contiguous-only path"
+
+        def write(path, full, one):
+            ps = _path_str(path)
+            base = next((r for rx, r in _CACHE_RANKS if rx.search(ps)), None)
+            if base is None:
+                return full
+            if ps.endswith("pos") and pad_start > 0:
+                one = jnp.where((one >= 0) & (one < pad_start), -1, one)
+            bdim = full.ndim - base
+            idx = tuple([slice(None)] * bdim + [slice(slot, slot + 1)])
+            return full.at[idx].set(one.astype(full.dtype))
+
+        self.caches = jax.tree_util.tree_map_with_path(write, self.caches,
+                                                       one_cache)

@@ -1,0 +1,29 @@
+"""Serving request / result dataclasses (shared by the whole stack)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # [L] int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    #: streaming callback, called as ``stream(uid, token)`` per new token
+    stream: Optional[Callable[[int, int], None]] = None
+
+
+@dataclass
+class Result:
+    uid: int
+    tokens: List[int] = field(default_factory=list)
+    prompt_len: int = 0
+    finished_reason: str = ""
+    truncated: bool = False             # prompt was cut to fit max_len
+    ttft_s: float = 0.0                 # time to first token
+    decode_tps: float = 0.0             # decode tokens/s (after first token)

@@ -1,0 +1,109 @@
+"""Model runner: weights + a table of compiled step specializations.
+
+The runner owns the parameters and every jitted graph the engine steps
+through.  Graphs are cached in a specialization table keyed by
+``(plan, kind, width)``:
+
+* ``(plan, "decode", B)``       -- one-token step over all B slots;
+* ``(plan, "chunk", C)``        -- fixed-width ``[B, C]`` chunked-prefill
+  step: every prompt, whatever its length, runs through this single graph
+  (no more jit-per-padded-length);
+* ``(plan, "prefill", L)``      -- legacy whole-prompt ``[1, L]`` graph for
+  stacks chunked prefill cannot serve (mamba state carry).
+
+Multiple LExI plans share the runner: ``add_plan`` validates a plan
+against the base config and derives the plan's config + regrouped
+parameter view once (``apply_plan_params`` re-slices the stacked layer
+groups; the weights themselves are loaded exactly once).  Serving a
+different plan is then just stepping through that plan's compiled
+specializations -- no engine rebuild, no weight re-init.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.models.opts import DEFAULT_OPTS, ModelOpts
+
+BASE_PLAN = "base"
+
+
+class ModelRunner:
+    def __init__(self, cfg: ModelConfig, params, *, mesh=None,
+                 opts: ModelOpts = DEFAULT_OPTS):
+        self.mesh = mesh
+        self.opts = opts
+        #: plan name -> (cfg, params-view); "base" is the config as given
+        self.plans: Dict[str, Tuple[ModelConfig, Any]] = {
+            BASE_PLAN: (cfg, params)}
+        self._jit: Dict[Tuple, Any] = {}
+
+    # ------------------------------------------------------------------ #
+    # Plans
+    # ------------------------------------------------------------------ #
+    def add_plan(self, name: str, plan) -> ModelConfig:
+        """Register a LExI plan under ``name``; returns its config."""
+        from repro.core.apply import apply_plan_params
+        if name == BASE_PLAN:
+            raise ValueError(f"{BASE_PLAN!r} names the unplanned base "
+                             "specialization; register plans under another "
+                             "name")
+        base_cfg, base_params = self.plans[BASE_PLAN]
+        cfg2, params2 = apply_plan_params(base_params, base_cfg, plan)
+        self.plans[name] = (cfg2, params2)
+        return cfg2
+
+    def cfg_for(self, plan: str = BASE_PLAN) -> ModelConfig:
+        return self.plans[plan][0]
+
+    def compiled_specializations(self) -> Tuple[Tuple, ...]:
+        """Keys of every graph compiled so far (introspection / tests)."""
+        return tuple(sorted(self._jit, key=str))
+
+    # ------------------------------------------------------------------ #
+    # Steps
+    # ------------------------------------------------------------------ #
+    def decode(self, tokens, pos, caches, block_tables=None, *,
+               plan: str = BASE_PLAN):
+        """One decode step over all slots -> (logits [B,V], caches)."""
+        cfg, params = self.plans[plan]
+        key = (plan, "decode", int(tokens.shape[0]))
+        if key not in self._jit:
+            self._jit[key] = jax.jit(
+                lambda p, t, po, c, bt: models.decode_fn(
+                    p, cfg, t, po, c, block_tables=bt, mesh=self.mesh,
+                    opts=self.opts))
+        return self._jit[key](params, tokens, pos, caches, block_tables)
+
+    def chunk_prefill(self, tokens, positions, last_index, caches,
+                      block_tables=None, *, plan: str = BASE_PLAN):
+        """One ``[B, C]`` chunked-prefill step -> (logits [B,V], caches)."""
+        cfg, params = self.plans[plan]
+        key = (plan, "chunk", int(tokens.shape[1]))
+        if key not in self._jit:
+            self._jit[key] = jax.jit(
+                lambda p, t, po, li, c, bt: models.chunk_prefill_fn(
+                    p, cfg, t, po, c, last_index=li, block_tables=bt,
+                    mesh=self.mesh, opts=self.opts))
+        return self._jit[key](params, tokens, positions, last_index, caches,
+                              block_tables)
+
+    def whole_prefill(self, tokens, positions, caches, *,
+                      plan: str = BASE_PLAN):
+        """Legacy per-request ``[1, L]`` prefill -> (logits [1,V], caches).
+
+        ``caches`` is a fresh 1-slot cache; the caller scatters it into its
+        slot (mamba fallback -- see kv_cache.scatter_slot).
+        """
+        cfg, params = self.plans[plan]
+        key = (plan, "prefill", int(tokens.shape[1]))
+        if key not in self._jit:
+            self._jit[key] = jax.jit(
+                lambda p, t, po, c: models.prefill_fn(
+                    p, cfg, {"tokens": t, "positions": po}, c,
+                    mesh=self.mesh, opts=self.opts))
+        return self._jit[key](params, tokens, positions, caches)

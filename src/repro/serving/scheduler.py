@@ -1,0 +1,165 @@
+"""Request scheduler: admission policy, lifecycle, and latency accounting.
+
+The scheduler is a pure policy object -- it never touches device arrays.
+It decides *which* waiting request is admitted next (``fifo`` preserves
+arrival order; ``sjf`` runs shortest-prompt-first, which removes the
+head-of-line blocking a single long prompt used to inflict on every short
+request queued behind it), tracks each request through
+WAITING -> PREFILL -> DECODE -> DONE, fires streaming callbacks, and
+accumulates per-request latency records (time-to-first-token, decode
+tokens/s) that ``percentiles()`` turns into the p50/p95 the engine reports.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.request import Request, Result
+
+WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
+
+#: name -> sort key over waiting requests (stable sort; ties stay FIFO)
+POLICIES: Dict[str, Callable] = {
+    "fifo": lambda t: 0,
+    "sjf": lambda t: len(t.req.prompt),
+}
+
+
+@dataclass
+class Tracked:
+    """One request's lifecycle record (scheduler-internal)."""
+
+    req: Request
+    result: Result
+    #: effective prompt (may be a truncated view of ``req.prompt``)
+    prompt: Optional[np.ndarray] = None
+    state: str = WAITING
+    slot: int = -1
+    consumed: int = 0          # prompt tokens already prefilled
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0       # first sampled token
+    t_done: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+class Scheduler:
+    def __init__(self, max_batch: int, policy: str = "fifo"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
+        self.policy = policy
+        self.max_batch = max_batch
+        self.waiting: List[Tracked] = []
+        self.slots: List[Optional[Tracked]] = [None] * max_batch
+        self.finished: List[Tracked] = []
+
+    # ------------------------------------------------------------------ #
+    # Submission / admission
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> Tracked:
+        t = Tracked(req=req, result=Result(uid=req.uid,
+                                           prompt_len=len(req.prompt)),
+                    prompt=np.asarray(req.prompt, np.int32),
+                    t_submit=time.time())
+        self.waiting.append(t)
+        return t
+
+    def reject(self, t: Tracked, reason: str) -> None:
+        """Refuse a request before it touches a slot (e.g. over-long prompt)."""
+        if t in self.waiting:
+            self.waiting.remove(t)
+        t.state = DONE
+        t.t_done = time.time()
+        t.result.finished_reason = reason
+        self.finished.append(t)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, t in enumerate(self.slots) if t is None]
+
+    def admit(self, can_allocate: Callable[[int, Tracked], bool]) -> List[Tracked]:
+        """Admit waiting requests into free slots, policy order.
+
+        ``can_allocate(slot, tracked)`` is the KV manager's gate.  A refusal
+        skips the candidate rather than stopping the scan: page need depends
+        on ``max_new_tokens``, which neither policy sorts by, so a later
+        candidate may still fit (best-effort packing -- a request the pool
+        cannot hold right now is retried every step and admitted as pages
+        drain; batch workloads cannot starve it indefinitely).
+        """
+        order = sorted(self.waiting, key=POLICIES[self.policy])
+        admitted: List[Tracked] = []
+        for t in order:
+            free = self.free_slots()
+            if not free:
+                break
+            slot = free[0]
+            if not can_allocate(slot, t):
+                continue
+            self.waiting.remove(t)
+            t.state, t.slot, t.t_admit = PREFILL, slot, time.time()
+            self.slots[slot] = t
+            admitted.append(t)
+        return admitted
+
+    # ------------------------------------------------------------------ #
+    # Step composition
+    # ------------------------------------------------------------------ #
+    def in_state(self, state: str) -> List[Tracked]:
+        return [t for t in self.slots if t is not None and t.state == state]
+
+    # ------------------------------------------------------------------ #
+    # Token events
+    # ------------------------------------------------------------------ #
+    def record_token(self, t: Tracked, token: int) -> None:
+        if not t.result.tokens:
+            t.t_first = time.time()
+        t.result.tokens.append(token)
+        if t.req.stream is not None:
+            t.req.stream(t.req.uid, token)
+
+    def finish(self, t: Tracked, reason: str) -> None:
+        t.state = DONE
+        t.t_done = time.time()
+        t.result.finished_reason = reason
+        if t.result.tokens:
+            t.result.ttft_s = t.t_first - t.t_submit
+            if len(t.result.tokens) > 1:
+                t.result.decode_tps = ((len(t.result.tokens) - 1)
+                                       / max(t.t_done - t.t_first, 1e-9))
+        if 0 <= t.slot < self.max_batch:
+            self.slots[t.slot] = None
+        self.finished.append(t)
+
+    def done(self) -> bool:
+        return not self.waiting and all(t is None for t in self.slots)
+
+    # ------------------------------------------------------------------ #
+    # Latency accounting
+    # ------------------------------------------------------------------ #
+    def percentiles(self, over: Optional[Sequence[Tracked]] = None
+                    ) -> Dict[str, float]:
+        """p50/p95 time-to-first-token (s) and decode tokens/s over finished
+        requests (rejected requests excluded -- they never produced a token)."""
+        recs = [t.result for t in (self.finished if over is None else over)
+                if t.result.tokens]
+        out: Dict[str, float] = {}
+        if not recs:
+            return out
+        ttft = np.array([r.ttft_s for r in recs])       # set by finish()
+        out["ttft_p50_s"] = float(np.percentile(ttft, 50))
+        out["ttft_p95_s"] = float(np.percentile(ttft, 95))
+        tps = np.array([r.decode_tps for r in recs if r.decode_tps > 0])
+        if tps.size:
+            out["decode_tps_p50"] = float(np.percentile(tps, 50))
+            out["decode_tps_p95"] = float(np.percentile(tps, 95))
+        return out
+
+    def results(self) -> List[Result]:
+        return sorted((t.result for t in self.finished), key=lambda r: r.uid)

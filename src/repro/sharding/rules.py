@@ -239,6 +239,15 @@ _CACHE_RANKS = (
     (re.compile(r"(^|/)state$"), 4),              # [B, H, P, N]
 )
 
+# paged-pool leaves: dim0 is the shared page pool, NOT a batch dim -- it is
+# never data-sharded (every data shard reads every page through its block
+# table); kv heads still shard over `model`.
+_PAGED_RANKS = (
+    (re.compile(r"(^|/)(kp|vp)$"), 4),            # [N, P, Hkv, hd]
+    (re.compile(r"(^|/)posp$"), 2),               # [N, P]
+    (re.compile(r"(^|/)(ckvp|kropep)$"), 3),      # [N, P, r]
+)
+
 
 def cache_specs(cache_tree, cfg: ModelConfig, mesh: Mesh,
                 seq_shard: bool = False):
@@ -258,6 +267,14 @@ def cache_specs(cache_tree, cfg: ModelConfig, mesh: Mesh,
     def leaf_spec(path, leaf):
         ps = _path_str(path)
         shape = leaf.shape
+        paged = next((r for rx, r in _PAGED_RANKS if rx.search(ps)), None)
+        if paged is not None:
+            entries = [None] * len(shape)
+            extra = len(shape) - paged
+            if extra >= 0 and re.search(r"(^|/)(kp|vp)$", ps) \
+                    and _div(shape[extra + 2], m):
+                entries[extra + 2] = "model"       # kv heads
+            return P(*entries)
         base = next((r for rx, r in _CACHE_RANKS if rx.search(ps)), None)
         if base is None or len(shape) < base:
             return P(*([None] * len(shape)))

@@ -1,0 +1,381 @@
+"""Scheduler -> KVCache -> ModelRunner stack: layouts, chunking, plans.
+
+Complements test_serving.py (which pins the legacy Engine API behavior):
+paged-vs-contiguous token exactness, chunked-vs-whole prefill equivalence,
+block recycling, scheduler policies, over-long prompt handling, plan
+validation, and multi-plan serving from one runner.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import LexiPlan, apply_plan_params, uniform_plan, validate_plan
+from repro.serving import Engine, KVCache, Request, Scheduler
+
+
+def small_cfg(name="olmo-1b"):
+    return get_config(name).reduced().with_(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, vocab_pad_multiple=16, dtype="float32")
+
+
+def moe_cfg():
+    return get_config("olmoe-1b-7b").reduced().with_(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        num_experts=4, moe_top_k=2, moe_d_ff=64, vocab_size=128,
+        vocab_pad_multiple=16, dtype="float32", moe_impl="gmm")
+
+
+def reference_generate(params, cfg, prompt: np.ndarray, n_new: int):
+    """Greedy decode by re-running the full forward each step (oracle)."""
+    from repro.models import transformer as tf
+    seq = list(prompt)
+    for _ in range(n_new):
+        tokens = jnp.asarray(np.array(seq)[None])
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        hidden, _, _ = tf.forward(params, cfg, tokens, positions, mode="train")
+        logits = tf.lm_logits(params, cfg, hidden[:, -1:])[:, 0]
+        seq.append(int(jnp.argmax(logits[0])))
+    return seq[len(prompt):]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = small_cfg()
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def mixed_requests(vocab, lens=(5, 9, 13), max_new=6, seed=2):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, vocab, n).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lens)]
+
+
+class TestLayoutEquivalence:
+    def test_paged_matches_contiguous_mixed_lengths(self, setup):
+        """Same workload, both layouts, token-for-token identical."""
+        cfg, params = setup
+        outs = {}
+        for layout in ("contiguous", "paged"):
+            eng = Engine(cfg, params, max_batch=3, max_len=64,
+                         prefill_chunk=4, cache_layout=layout, page_size=8)
+            outs[layout] = [r.tokens for r in
+                            eng.serve(mixed_requests(cfg.vocab_size))]
+        assert outs["paged"] == outs["contiguous"]
+
+    def test_paged_chunked_matches_reference(self, setup):
+        """Prompts crossing the chunk boundary reproduce the full-forward
+        oracle exactly (greedy)."""
+        cfg, params = setup
+        reqs = mixed_requests(cfg.vocab_size)
+        eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_chunk=4,
+                     cache_layout="paged", page_size=8)
+        results = eng.serve(reqs)
+        for r, q in zip(results, reqs):
+            assert r.tokens == reference_generate(params, cfg, q.prompt, 6), \
+                f"uid {r.uid}"
+
+    def test_chunked_matches_whole_prefill(self, setup):
+        """Chunked prefill == legacy whole-prompt prefill, any chunk width."""
+        cfg, params = setup
+        reqs = mixed_requests(cfg.vocab_size)
+        whole = Engine(cfg, params, max_batch=3, max_len=64,
+                       cache_layout="contiguous", prefill_chunk=0,
+                       prefill_pad=8).serve(mixed_requests(cfg.vocab_size))
+        for chunk in (3, 8, 64):
+            eng = Engine(cfg, params, max_batch=3, max_len=64,
+                         prefill_chunk=chunk)
+            got = eng.serve(mixed_requests(cfg.vocab_size))
+            assert [r.tokens for r in got] == [r.tokens for r in whole], chunk
+        del reqs
+
+    def test_sliding_window_chunked_matches_reference(self, setup):
+        """Ring-wrap regression: a prompt longer than the window, prefilled
+        in chunks, must match the oracle -- the chunk's writes must not
+        evict keys its own earlier queries still attend to."""
+        cfg, _ = setup
+        cfg = cfg.with_(sliding_window=8)
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, cfg.vocab_size, 21).astype(np.int32)
+        ref = reference_generate(params, cfg, prompt, 6)
+        for layout in ("contiguous", "paged"):
+            eng = Engine(cfg, params, max_batch=2, max_len=64,
+                         prefill_chunk=4, cache_layout=layout, page_size=4)
+            out = eng.serve([Request(uid=0, prompt=prompt, max_new_tokens=6)])
+            assert out[0].tokens == ref, layout
+        # chunk wider than the window is clamped to the ring size
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=32)
+        assert eng.prefill_chunk == 8
+        out = eng.serve([Request(uid=0, prompt=prompt, max_new_tokens=6)])
+        assert out[0].tokens == ref
+
+    def test_moe_paged_matches_contiguous(self):
+        """Dropless MoE dispatch through the paged stack stays exact."""
+        cfg = moe_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        outs = {}
+        for layout in ("contiguous", "paged"):
+            eng = Engine(cfg, params, max_batch=2, max_len=64,
+                         prefill_chunk=4, cache_layout=layout)
+            outs[layout] = [r.tokens for r in
+                            eng.serve(mixed_requests(cfg.vocab_size,
+                                                     lens=(5, 11)))]
+        assert outs["paged"] == outs["contiguous"]
+
+
+class TestBlockRecycling:
+    def test_pages_recycled_across_requests(self, setup):
+        """A pool far smaller than max_batch x max_len still serves the
+        workload by recycling freed pages."""
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=4, max_len=64, prefill_chunk=4,
+                     cache_layout="paged", page_size=8, num_pages=4)
+        reqs = [Request(uid=i,
+                        prompt=np.arange(10, dtype=np.int32) + i,
+                        max_new_tokens=6)
+                for i in range(6)]
+        results = eng.serve(reqs)
+        assert all(len(r.tokens) == 6 for r in results)
+        assert eng.kv.free_pages() == 4                 # everything returned
+        assert eng.kv.stats["pages_peak"] <= 4          # never over-allocated
+        assert eng.kv.stats["pages_in_use"] == 0
+
+    def test_recycled_pages_are_clean(self, setup):
+        """Tokens after recycling match a fresh engine (no stale positions
+        leaking through the mask from a previous tenant of the page)."""
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=1, max_len=64, prefill_chunk=4,
+                     cache_layout="paged", page_size=8, num_pages=3)
+        p1 = np.arange(17, dtype=np.int32)              # fills 3 pages
+        p2 = (np.arange(9, dtype=np.int32) + 3)
+        eng.serve([Request(uid=0, prompt=p1, max_new_tokens=4)])
+        second = eng.serve([Request(uid=1, prompt=p2, max_new_tokens=6)])
+        fresh = Engine(cfg, params, max_batch=1, max_len=64, prefill_chunk=4,
+                       cache_layout="paged", page_size=8, num_pages=3)
+        alone = fresh.serve([Request(uid=1, prompt=p2, max_new_tokens=6)])
+        assert second[0].tokens == alone[0].tokens
+
+    def test_oversized_request_rejected(self, setup):
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4,
+                     cache_layout="paged", page_size=8, num_pages=2)
+        out = eng.serve([Request(uid=0,
+                                 prompt=np.arange(30, dtype=np.int32),
+                                 max_new_tokens=8)])
+        assert out[0].finished_reason == "rejected_kv_capacity"
+        assert out[0].tokens == []
+
+
+class TestScheduler:
+    def _reqs(self, lens):
+        return [Request(uid=i, prompt=np.zeros(n, np.int32))
+                for i, n in enumerate(lens)]
+
+    def test_fifo_preserves_arrival_order(self):
+        s = Scheduler(max_batch=2, policy="fifo")
+        for r in self._reqs([20, 5, 10]):
+            s.submit(r)
+        admitted = s.admit(lambda slot, t: True)
+        assert [t.req.uid for t in admitted] == [0, 1]
+
+    def test_sjf_runs_shortest_prompt_first(self):
+        """Shortest-prompt-first: the long head-of-line prompt no longer
+        blocks the short ones queued behind it."""
+        s = Scheduler(max_batch=2, policy="sjf")
+        for r in self._reqs([20, 5, 10]):
+            s.submit(r)
+        admitted = s.admit(lambda slot, t: True)
+        assert [t.req.uid for t in admitted] == [1, 2]
+        assert [t.req.uid for t in s.waiting] == [0]
+
+    def test_admission_respects_allocation_gate(self):
+        s = Scheduler(max_batch=4, policy="fifo")
+        for r in self._reqs([4, 4, 4]):
+            s.submit(r)
+        admitted = s.admit(lambda slot, t: t.req.uid < 1)
+        assert [t.req.uid for t in admitted] == [0]
+        assert len(s.waiting) == 2
+
+    def test_admission_skips_unallocatable_head(self):
+        """A head request the pool can't hold right now must not block
+        smaller candidates that fit (best-effort packing)."""
+        s = Scheduler(max_batch=2, policy="fifo")
+        for r in self._reqs([30, 4, 4]):
+            s.submit(r)
+        admitted = s.admit(lambda slot, t: len(t.prompt) <= 4)
+        assert [t.req.uid for t in admitted] == [1, 2]
+        assert [t.req.uid for t in s.waiting] == [0]
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="unknown policy"):
+            Scheduler(max_batch=1, policy="priority")
+
+
+class TestOverlongPrompts:
+    def test_overlong_prompt_rejected_not_crashed(self, setup):
+        """Seed bug regression: prompts > max_len used to crash admit()."""
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=32, prefill_chunk=4)
+        reqs = [Request(uid=0, prompt=np.arange(40, dtype=np.int32),
+                        max_new_tokens=4),
+                Request(uid=1, prompt=np.arange(8, dtype=np.int32),
+                        max_new_tokens=4)]
+        out = eng.serve(reqs)
+        assert out[0].finished_reason == "rejected_prompt_too_long"
+        assert out[0].tokens == []
+        assert len(out[1].tokens) == 4                  # neighbor unaffected
+
+    def test_overlong_prompt_truncated_when_opted_in(self, setup):
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=1, max_len=32, prefill_chunk=4,
+                     truncate_prompts=True)
+        out = eng.serve([Request(uid=0, prompt=np.arange(40, dtype=np.int32),
+                                 max_new_tokens=4)])
+        assert out[0].truncated
+        assert out[0].prompt_len == 31
+        assert len(out[0].tokens) >= 1
+        assert out[0].finished_reason in ("length", "eos")
+
+    def test_empty_prompt_rejected(self, setup):
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=1, max_len=32, prefill_chunk=4)
+        out = eng.serve([Request(uid=0, prompt=np.zeros(0, np.int32))])
+        assert out[0].finished_reason == "rejected_empty_prompt"
+
+
+class TestPlanValidation:
+    def test_wrong_arch_rejected(self):
+        cfg = moe_cfg()
+        plan = LexiPlan(arch="qwen3-32b", budget=4, plan=(2, 2),
+                        fitness=0.0, method="uniform", k_base=2)
+        with pytest.raises(ValueError, match="searched for arch"):
+            validate_plan(cfg, plan)
+
+    def test_wrong_length_rejected(self):
+        cfg = moe_cfg()
+        plan = LexiPlan(arch=cfg.name, budget=6, plan=(2, 2, 2),
+                        fitness=0.0, method="uniform", k_base=2)
+        with pytest.raises(ValueError, match="MoE layers"):
+            validate_plan(cfg, plan)
+
+    def test_k_out_of_range_rejected(self):
+        cfg = moe_cfg()
+        n = cfg.num_moe_layers
+        plan = LexiPlan(arch=cfg.name, budget=n * 8, plan=(8,) * n,
+                        fitness=0.0, method="uniform", k_base=2)
+        with pytest.raises(ValueError, match="outside valid range"):
+            validate_plan(cfg, plan)
+
+    def test_load_rejects_malformed_artifact(self, tmp_path):
+        import json
+        path = tmp_path / "bad_plan.json"
+        path.write_text(json.dumps({"arch": "x", "budget": 2, "plan": [0, 2],
+                                    "fitness": 0.0, "method": "dp",
+                                    "k_base": 2}))
+        with pytest.raises(ValueError, match="ints >= 1"):
+            LexiPlan.load(str(path))
+
+    def test_save_load_roundtrip_applies(self, tmp_path):
+        cfg = moe_cfg()
+        plan = uniform_plan(cfg, 1)
+        path = tmp_path / "plan.json"
+        plan.save(str(path))
+        loaded = LexiPlan.load(str(path))
+        validate_plan(cfg, loaded)
+        assert loaded.plan == plan.plan
+
+
+class TestMultiPlanServing:
+    def test_two_plans_one_runner(self):
+        """Two LExI plans served from one engine == fresh per-plan engines,
+        with no weight re-init and plan hot-swap reusing compiled graphs."""
+        cfg = moe_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        n = cfg.num_moe_layers
+        plan_a = uniform_plan(cfg, 1)
+        plan_b = LexiPlan(arch=cfg.name, budget=n + 1,
+                          plan=(1,) * (n - 1) + (2,), fitness=0.0,
+                          method="uniform", k_base=cfg.moe_top_k)
+
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        eng.add_plan("a", plan_a)
+        eng.add_plan("b", plan_b)
+        reqs = lambda: mixed_requests(cfg.vocab_size, lens=(5, 9), max_new=4)
+
+        got = {name: [r.tokens for r in eng.serve(reqs(), plan=name)]
+               for name in ("a", "b")}
+        # hot-swap back: no new compiled specializations needed
+        n_compiled = len(eng.runner.compiled_specializations())
+        again = [r.tokens for r in eng.serve(reqs(), plan="a")]
+        assert again == got["a"]
+        assert len(eng.runner.compiled_specializations()) == n_compiled
+
+        for name, plan in (("a", plan_a), ("b", plan_b)):
+            cfg_p, params_p = apply_plan_params(params, cfg, plan)
+            solo = Engine(cfg_p, params_p, max_batch=2, max_len=64,
+                          prefill_chunk=4)
+            assert [r.tokens for r in solo.serve(reqs())] == got[name], name
+
+    def test_plan_does_not_stick_across_serves(self):
+        """serve() without plan= must revert to the base specialization,
+        not silently keep the previously selected plan."""
+        cfg = moe_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        reqs = lambda: mixed_requests(cfg.vocab_size, lens=(5, 9), max_new=4)
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        base_first = [r.tokens for r in eng.serve(reqs())]
+        eng.add_plan("k1", uniform_plan(cfg, 1))
+        eng.serve(reqs(), plan="k1")
+        assert eng.plan_name == "k1"
+        base_again = [r.tokens for r in eng.serve(reqs())]
+        assert eng.plan_name == "base"
+        assert base_again == base_first
+
+    def test_base_plan_name_is_reserved(self):
+        cfg = moe_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        with pytest.raises(ValueError, match="base"):
+            eng.add_plan("base", uniform_plan(cfg, 1))
+
+    def test_streaming_callback_fires_per_token(self, setup):
+        cfg, params = setup
+        seen = []
+        req = Request(uid=7, prompt=np.arange(6, dtype=np.int32),
+                      max_new_tokens=5,
+                      stream=lambda uid, tok: seen.append((uid, tok)))
+        eng = Engine(cfg, params, max_batch=1, max_len=64, prefill_chunk=4)
+        out = eng.serve([req])
+        assert [t for _, t in seen] == out[0].tokens
+        assert all(u == 7 for u, _ in seen)
+
+
+class TestLatencyStats:
+    def test_percentiles_reported(self, setup):
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        out = eng.serve(mixed_requests(cfg.vocab_size))
+        for k in ("ttft_p50_s", "ttft_p95_s", "decode_tps_p50",
+                  "decode_tps_p95"):
+            assert k in eng.stats and eng.stats[k] > 0
+        assert all(r.ttft_s > 0 for r in out)
+        assert all(r.decode_tps > 0 for r in out)
+
+    def test_stale_percentiles_cleared_between_serves(self, setup):
+        """An all-rejected workload must not report the previous workload's
+        latency percentiles."""
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=32, prefill_chunk=4)
+        eng.serve(mixed_requests(cfg.vocab_size, lens=(5, 9)))
+        assert "ttft_p50_s" in eng.stats
+        out = eng.serve([Request(uid=0, prompt=np.arange(40, dtype=np.int32))])
+        assert out[0].finished_reason == "rejected_prompt_too_long"
+        assert "ttft_p50_s" not in eng.stats
