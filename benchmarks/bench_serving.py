@@ -6,7 +6,13 @@ same weights, one runner, measured tokens/s for
   * contiguous layout + whole-prompt prefill (the legacy monolith's mode),
   * contiguous layout + chunked prefill (isolates the chunking win),
   * paged layout + chunked prefill (the production default),
-  * paged+chunked with a LExI plan vs the uniform-k baseline.
+  * paged+chunked with a LExI plan vs the uniform-k baseline,
+
+plus the gather-vs-in-kernel paged-decode ablation at long context: same
+paged layout, decode attention either gathering the pool into the full
+``[B, max_len]`` view (oracle) or walking the block table in-kernel with
+the live-page bound (``use_kernel=True``).  The gather pays O(max_len)
+traffic per step, the kernel O(live tokens) -- the gap is the point.
 
 Numbers land in ``BENCH_serving.json`` with explicit tok/s plus TTFT /
 decode-tok/s percentiles (CSV rows carry the measured serve wall time in
@@ -41,6 +47,85 @@ def _measure(eng: Engine, vocab: int, n_req: int, plan=None):
     return eng.throughput(), dict(eng.stats)
 
 
+def _decode_ablation(cfg, params, csv: CSV, *, fast: bool) -> dict:
+    """Steady-state decode cadence, gather vs in-kernel, interleaved A/B.
+
+    Each engine admits one uniform wave of ``max_batch`` requests, prefills
+    it, and decodes to the target context; the measured region then steps
+    the engines alternately and reports the median decode-step latency as
+    tokens/s (``batch / step``).  Requests are finished by hand afterwards
+    so the engines stay reusable.
+    """
+    import time
+
+    from repro.serving.scheduler import DECODE, PREFILL
+
+    page_size = 16
+    n_blk = 128 if fast else 256
+    batch = 4
+    # prompt lengths chosen so the kernel's live_blocks bucket is the same
+    # at the first and last measured step -- otherwise a bucket boundary
+    # inside the window compiles a fresh decode graph mid-measurement
+    contexts = ((72, "short_ctx"), ((200 if fast else 400), "long_ctx"))
+    n_steps = 24 if fast else 48
+
+    abl = {"max_len": n_blk * page_size, "page_size": page_size,
+           "table_blocks": n_blk, "batch": batch,
+           "measured_steps": n_steps}
+
+    for plen, ctx in contexts:
+        # pool sized to the live tokens of the wave, as paged serving
+        # intends -- NOT max_batch x max_len.  (On CPU, where buffer
+        # donation is unsupported and every step round-trips the pool
+        # arrays, a worst-case pool buries both paths under identical
+        # copy costs; a lean pool is also what makes the long-max_len
+        # table affordable in the first place.)
+        need = -(-(plen + n_steps + 8) // page_size)
+        akw = dict(max_batch=batch, max_len=n_blk * page_size,
+                   prefill_pad=16, page_size=page_size,
+                   cache_layout="paged", num_pages=batch * need + 4)
+        engines = {name: Engine(cfg, params, use_kernel=uk, **akw)
+                   for name, uk in (("gather", False), ("kernel", True))}
+        times = {name: [] for name in engines}
+        for e in engines.values():
+            rng = np.random.default_rng(3)
+            for i in range(batch):
+                e._submit(Request(
+                    uid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               plen).astype(np.int32),
+                    max_new_tokens=n_steps + 8))
+            e._admit()
+            while e.sched.in_state(PREFILL):
+                e._chunk_prefill_step(e.sched.in_state(PREFILL))
+            for _ in range(4):                          # compile + warm
+                e._decode_step(e.sched.in_state(DECODE))
+            first = np.full(batch, plen + 4, np.int32)
+            last = np.full(batch, plen + 4 + n_steps, np.int32)
+            assert e.kv.live_blocks(first) == e.kv.live_blocks(last), \
+                "bucket boundary inside the measured window (recompile)"
+        for _ in range(n_steps):
+            for name, e in engines.items():
+                dec = e.sched.in_state(DECODE)
+                t0 = time.perf_counter()
+                e._decode_step(dec)
+                times[name].append(time.perf_counter() - t0)
+        for name, e in engines.items():
+            for t in e.sched.in_state(DECODE):          # drain by hand
+                e._finish(t, "length")
+            step = float(np.median(times[name]))
+            abl[f"{name}_{ctx}"] = {
+                "prompt_len": plen,
+                "decode_step_ms_p50": round(step * 1e3, 3),
+                "decode_tok_per_s": round(batch / step, 2)}
+            csv.add(f"serving/paged_decode_{name}_{ctx}", step * 1e6,
+                    f"decode_tok_per_s={batch / step:.1f}")
+    abl["decode_speedup_kernel_vs_gather"] = {
+        ctx: round(abl[f"kernel_{ctx}"]["decode_tok_per_s"]
+                   / max(abl[f"gather_{ctx}"]["decode_tok_per_s"], 1e-9), 3)
+        for _, ctx in contexts}
+    return abl
+
+
 def run(csv: CSV, *, fast: bool = False) -> None:
     cfg, params, dc, _ = trained_tiny_moe(steps=60 if fast else 200)
     cfg = cfg.with_(moe_impl="gmm")     # dropless production dispatch
@@ -71,6 +156,18 @@ def run(csv: CSV, *, fast: bool = False) -> None:
     eng = Engine(cfg, params, cache_layout="paged", **ekw)
     paged = record("paged_chunked", eng)
     out["speedup_paged_chunked_vs_contiguous"] = round(paged / base, 3)
+
+    # gather-vs-in-kernel paged decode: a table much wider than the live
+    # context (the long-max_len serving regime paged attention exists
+    # for).  The gather path reads the full n_blk*P view every step; the
+    # kernel walks only the live-page bucket -- the gap is what this
+    # ablation records.  Methodology: both engines hold an identical
+    # decoding wave in steady state; their decode steps are then
+    # *interleaved* (A, B, A, B, ...) and summarized by the per-step
+    # median, so slow-host drift hits both paths equally instead of
+    # whichever serve ran during a noisy window.
+    abl = _decode_ablation(cfg, params, csv, fast=fast)
+    out["paged_decode_ablation"] = abl
 
     # LExI plan at a 50% active-expert budget, same runner / weights
     budget = cfg.num_moe_layers * cfg.moe_top_k // 2

@@ -1,7 +1,11 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-moe_ffn          grouped per-expert SwiGLU FFN (the FusedMoE analogue)
-flash_attention  online-softmax causal/windowed attention for prefill
+moe_ffn            grouped per-expert SwiGLU FFN (the FusedMoE analogue)
+flash_attention    online-softmax causal/windowed attention for prefill
+flash_decode       one-token decode over a contiguous position-masked cache
+flash_decode_paged block-table-native paged decode (GQA + absorbed MLA):
+                   scalar-prefetched page indices drive the K/V page DMA
+moe_gmm            ragged grouped SwiGLU over the sorted dropless buffer
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper),
 ref.py (pure-jnp oracle).  Validated with interpret=True on CPU.

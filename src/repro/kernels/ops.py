@@ -58,6 +58,47 @@ def flash_decode(q, k, v, pos, cur_pos, *, window=None, block_k: int = 512):
                                block_k=block_k, interpret=_interpret())
 
 
+@partial(jax.jit, static_argnames=("window",))
+def flash_decode_paged(q, kp, vp, posp, block_tables, cur_pos, *, window=None):
+    """Block-table-native paged decode attention (GQA).
+
+    On TPU this is the Mosaic kernel walking the table with per-page DMA.
+    Off-TPU it runs the jnp reference with *identical semantics* instead of
+    the interpreted kernel: interpret-mode grid iteration scales with the
+    pool size and would be orders of magnitude slower than XLA here, while
+    the reference still only gathers the pages it is told to walk (pass a
+    truncated live view of the table to keep traffic O(live tokens)).  The
+    kernel body itself is validated in interpret mode by
+    tests/test_paged_attention.py.
+    """
+    from repro.kernels.flash_decode_paged import flash_decode_paged_pallas
+    if _interpret():
+        from repro.kernels import ref
+        return ref.flash_decode_paged_ref(q, kp, vp, posp, block_tables,
+                                          cur_pos, window=window)
+    return flash_decode_paged_pallas(q, kp, vp, posp, block_tables, cur_pos,
+                                     window=window, interpret=False)
+
+
+@partial(jax.jit, static_argnames=("scale",))
+def flash_decode_paged_mla(q_lat, q_rope, ckvp, kropep, posp, block_tables,
+                           cur_pos, *, scale: float):
+    """Weight-absorbed MLA paged decode over the latent pool pair.
+
+    Returns the latent attention output [B, H, r] in f32; the caller folds
+    W_kv_b(v) in afterwards.  Backend selection as in flash_decode_paged.
+    """
+    from repro.kernels.flash_decode_paged import flash_decode_paged_mla_pallas
+    if _interpret():
+        from repro.kernels import ref
+        return ref.flash_decode_paged_mla_ref(q_lat, q_rope, ckvp, kropep,
+                                              posp, block_tables, cur_pos,
+                                              scale=scale)
+    return flash_decode_paged_mla_pallas(q_lat, q_rope, ckvp, kropep, posp,
+                                         block_tables, cur_pos, scale=scale,
+                                         interpret=False)
+
+
 def flash_attention(q, k, v, *, window=None):
     """Model-layout adapter: q [B,S,Hq,hd], k/v [B,S,Hkv,hd] -> [B,S,Hq,hd]."""
     qt = q.transpose(0, 2, 1, 3)

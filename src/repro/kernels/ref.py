@@ -58,6 +58,51 @@ def flash_decode_ref(q, k, v, pos, cur_pos, *, window=None):
     return out.reshape(b, hq, hd).astype(q.dtype)
 
 
+def flash_decode_paged_ref(q, kp, vp, posp, block_tables, cur_pos, *,
+                           window=None):
+    """Block-table-native paged decode attention (GQA), gather-form oracle.
+
+    q [B,Hq,hd]; kp/vp [N,P,Hkv,hd]; posp [N,P]; block_tables [B,n_blk];
+    cur_pos [B] -> [B,Hq,hd].  Semantics of kernels/flash_decode_paged.py:
+    only the pages named by ``block_tables`` participate, and a slot is
+    valid iff ``0 <= posp <= cur_pos`` (and inside the window, if any) --
+    trash-page entries carry posp = -1 and mask themselves.
+
+    Also the production CPU fallback (ops.flash_decode_paged): the gather
+    width is the *walked* table width, so a truncated live-page view keeps
+    the O(live tokens) traffic story on backends without Mosaic.
+    """
+    b, n_blk = block_tables.shape
+    p, hkv, hd = kp.shape[1], kp.shape[2], kp.shape[3]
+    k = jnp.take(kp, block_tables, axis=0).reshape(b, n_blk * p, hkv, hd)
+    v = jnp.take(vp, block_tables, axis=0).reshape(b, n_blk * p, hkv, hd)
+    pos = jnp.take(posp, block_tables, axis=0).reshape(b, n_blk * p)
+    return flash_decode_ref(q, k, v, pos, cur_pos, window=window)
+
+
+def flash_decode_paged_mla_ref(q_lat, q_rope, ckvp, kropep, posp,
+                               block_tables, cur_pos, *, scale: float):
+    """Weight-absorbed MLA paged decode, gather-form oracle (and CPU
+    fallback of ops.flash_decode_paged_mla).
+
+    q_lat [B,H,r]; q_rope [B,H,dr]; ckvp [N,P,r]; kropep [N,P,dr];
+    posp [N,P]; block_tables [B,n_blk]; cur_pos [B] -> latent [B,H,r] f32.
+    """
+    b, n_blk = block_tables.shape
+    p = ckvp.shape[1]
+    ckv = jnp.take(ckvp, block_tables, axis=0).reshape(b, n_blk * p, -1)
+    kr = jnp.take(kropep, block_tables, axis=0).reshape(b, n_blk * p, -1)
+    pos = jnp.take(posp, block_tables, axis=0).reshape(b, n_blk * p)
+    s = (jnp.einsum("bhr,bkr->bhk", q_lat.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhd,bkd->bhk", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    valid = (pos >= 0) & (pos <= cur_pos[:, None])
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkr->bhr", probs, ckv.astype(jnp.float32))
+
+
 def flash_attention_ref(q, k, v, *, window=None):
     """Exact causal (optionally windowed) attention.
 

@@ -56,6 +56,9 @@ def main() -> int:
     ap.add_argument("--prefill-chunk", type=int, default=None)
     ap.add_argument("--cache-layout", choices=["paged", "contiguous"],
                     default=None)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="paged decode attends pages in-kernel (block-table-"
+                         "native flash-decode) instead of gathering")
     ap.add_argument("--scheduler", choices=["fifo", "sjf"], default="fifo")
     ap.add_argument("--lexi-budget-frac", type=float, default=None,
                     help="search a plan inline at this active-expert budget")
@@ -75,7 +78,9 @@ def main() -> int:
 
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
                  prefill_chunk=args.prefill_chunk,
-                 cache_layout=args.cache_layout, scheduler=args.scheduler)
+                 cache_layout=args.cache_layout,
+                 use_kernel=args.use_kernel or None,
+                 scheduler=args.scheduler)
     print(f"arch={cfg.name} baseline top-k={cfg.moe_top_k or 'n/a'} "
           f"layout={eng.kv.layout} chunk={eng.prefill_chunk or 'whole'}")
     eng.serve(reqs)

@@ -18,7 +18,11 @@ logical block j of sequence b to a physical page; page 0 is a reserved trash
 page (``posp`` stays -1) that unmapped table entries point at, so gather-based
 reads need no validity sideband.  Writes with invalid positions (< 0) are
 routed out of bounds and dropped (``mode="drop"``), which is what lets one
-batched graph serve a mix of active / idle / prefilling slots.
+batched graph serve a mix of active / idle / prefilling slots.  Paged decode
+has two read paths (DESIGN.md §4): the gather oracle (pool -> contiguous
+view -> SDPA) and, under ``use_paged_kernel``, the block-table-native
+flash-decode kernel that attends the pages in place, optionally walking only
+the first ``kernel_blocks`` table columns (the live-page bound).
 
 ``pos`` stores the absolute position held in each slot (-1 = empty).  For
 sliding-window attention the buffer is a ring of size ``min(max_len, window)``
@@ -373,6 +377,8 @@ def gqa_attention(
     seq_shard_mesh=None,
     use_flash_decode: bool = False,
     block_tables=None,
+    use_paged_kernel: bool = False,
+    kernel_blocks: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """x [B,S,D]; positions [B,S] (train/prefill/chunk) or [B] (decode).
 
@@ -386,6 +392,13 @@ def gqa_attention(
     ``positions [B, S]`` with -1 marking pad / idle rows.  With a paged
     cache, ``block_tables [B, n_blk]`` routes both writes and the gathered
     read.
+
+    ``use_paged_kernel`` makes paged decode attend the pages in-kernel
+    (block-table-native flash-decode) instead of gathering the pool into a
+    contiguous view first; ``kernel_blocks`` optionally bounds the walk to
+    the first N table columns (the live-page bucket -- see
+    serving/kv_cache.py ``live_blocks``).  Writes always go through the
+    full table.
     """
     if kv_override is not None:
         rope = False
@@ -420,6 +433,7 @@ def gqa_attention(
                 compute_dtype)
             out = out.reshape(b, s, cfg.num_heads * hd) @ params["wo"]
             return out, new_cache
+        out = None
         if kv_override is None:
             if rope:
                 k = apply_rope(k, pos_b[:, None], cfg.rope_theta)
@@ -430,9 +444,19 @@ def gqa_attention(
                 cache["vp"] = _paged_write(cache["vp"], v, pos_s, block_tables)
                 cache["posp"] = _paged_write(cache["posp"], pos_s, pos_s,
                                              block_tables)
-                k_all = _paged_read(cache["kp"], block_tables)
-                v_all = _paged_read(cache["vp"], block_tables)
-                kv_pos = _paged_read(cache["posp"], block_tables)
+                if use_paged_kernel:
+                    # block-table-native: attend the pages in-kernel, walking
+                    # only the live-page prefix when the caller bounded it
+                    from repro.kernels import ops as kops
+                    bt = (block_tables if kernel_blocks is None
+                          else block_tables[:, :kernel_blocks])
+                    out = kops.flash_decode_paged(
+                        q[:, 0], cache["kp"], cache["vp"], cache["posp"],
+                        bt, pos_b, window=cfg.sliding_window)[:, None]
+                else:
+                    k_all = _paged_read(cache["kp"], block_tables)
+                    v_all = _paged_read(cache["vp"], block_tables)
+                    kv_pos = _paged_read(cache["posp"], block_tables)
             else:
                 cache["k"] = _write_step(cache["k"], k[:, 0], pos_b)
                 cache["v"] = _write_step(cache["v"], v[:, 0], pos_b)
@@ -440,15 +464,16 @@ def gqa_attention(
                 k_all, v_all, kv_pos = cache["k"], cache["v"], cache["pos"]
         else:
             k_all, v_all, kv_pos = k, v, kv_positions
-        if use_flash_decode and kv_override is None:
-            from repro.kernels import ops as kops
-            out = kops.flash_decode(q[:, 0], k_all, v_all, kv_pos, pos_b,
-                                    window=cfg.sliding_window)[:, None]
-        else:
-            bias = _mask_bias(pos_b[:, None], kv_pos, cfg.sliding_window,
-                              causal)
-            out = _sdpa(q, k_all, v_all, bias, 1.0 / (hd ** 0.5),
-                        compute_dtype)
+        if out is None:
+            if use_flash_decode and kv_override is None:
+                from repro.kernels import ops as kops
+                out = kops.flash_decode(q[:, 0], k_all, v_all, kv_pos, pos_b,
+                                        window=cfg.sliding_window)[:, None]
+            else:
+                bias = _mask_bias(pos_b[:, None], kv_pos, cfg.sliding_window,
+                                  causal)
+                out = _sdpa(q, k_all, v_all, bias, 1.0 / (hd ** 0.5),
+                            compute_dtype)
         new_cache = cache
     elif mode == "chunk":
         # chunked prefill: attend against the PRE-write cache plus the
@@ -553,8 +578,16 @@ def mla_attention(
     cache: Optional[Dict] = None,
     absorb: bool = True,
     block_tables=None,
+    use_paged_kernel: bool = False,
+    kernel_blocks: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
-    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style)."""
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style).
+
+    ``use_paged_kernel`` (paged cache, decode, absorbed path only) attends
+    the latent pool pair ``ckvp/kropep`` in-kernel through the block table
+    instead of gathering; other modes, and the materialized (non-absorbed)
+    path, keep the gather oracle.
+    """
     b, s, _ = x.shape
     scale = 1.0 / ((cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** 0.5)
 
@@ -573,6 +606,23 @@ def mla_attention(
                                            block_tables)
             cache["posp"] = _paged_write(cache["posp"], q_pos, q_pos,
                                          block_tables)
+            if use_paged_kernel and absorb and mode == "decode":
+                from repro.kernels import ops as kops
+                wk_b, wv_b = _wkv_b_split(params, cfg)
+                q_lat = jnp.einsum("bshn,rhn->bshr",
+                                   q_nope.astype(jnp.float32),
+                                   wk_b.astype(jnp.float32))
+                bt = (block_tables if kernel_blocks is None
+                      else block_tables[:, :kernel_blocks])
+                o_lat = kops.flash_decode_paged_mla(
+                    q_lat[:, 0], q_rope[:, 0].astype(jnp.float32),
+                    cache["ckvp"], cache["kropep"], cache["posp"], bt,
+                    positions, scale=scale)                # [B, H, r] f32
+                out = jnp.einsum("bhr,rhv->bhv", o_lat,
+                                 wv_b.astype(jnp.float32))[:, None]
+                out = out.astype(x.dtype).reshape(
+                    b, s, cfg.num_heads * cfg.v_head_dim)
+                return out @ params["wo"], cache
             ckv = _paged_read(cache["ckvp"], block_tables)
             krope = _paged_read(cache["kropep"], block_tables)
             kv_pos = _paged_read(cache["posp"], block_tables)

@@ -88,6 +88,7 @@ def apply_block(
     mesh=None,
     opts: ModelOpts = DEFAULT_OPTS,
     block_tables=None,
+    kernel_blocks: Optional[int] = None,
 ):
     """Returns (x, new_cache, aux_loss)."""
     if mesh is not None and opts.act_constraint:
@@ -109,7 +110,9 @@ def apply_block(
             mode=mode, cache=cache)
         return x + h, new_cache, aux
 
-    attn_kw = {"block_tables": block_tables}
+    attn_kw = {"block_tables": block_tables,
+               "use_paged_kernel": opts.use_paged_kernel,
+               "kernel_blocks": kernel_blocks}
     if cfg.attention == "mla":
         attn_kw["absorb"] = opts.mla_absorb
     else:
@@ -197,6 +200,7 @@ def apply_stack(
     mesh=None,
     opts: ModelOpts = DEFAULT_OPTS,
     block_tables=None,
+    kernel_blocks: Optional[int] = None,
 ):
     """Run all layer groups.  Returns (x, new_caches, total_aux)."""
     groups = group_pattern(cfg.pattern())
@@ -213,7 +217,8 @@ def apply_stack(
         def one_layer(p_layer, xx, c_layer, spec=g.spec):
             fn = partial(apply_block, cfg=cfg, spec=spec, positions=positions,
                          mode=mode, mesh=mesh, opts=opts,
-                         block_tables=block_tables)
+                         block_tables=block_tables,
+                         kernel_blocks=kernel_blocks)
             if opts.remat != "none" and mode == "train":
                 fn = _remat(fn, opts)
             return fn(p_layer, x=xx, cache=c_layer)

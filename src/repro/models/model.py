@@ -74,12 +74,14 @@ def prefill_fn(params, cfg: ModelConfig, batch, caches, *, mesh=None,
 
 
 def decode_fn(params, cfg: ModelConfig, tokens, pos, caches, *, mesh=None,
-              opts: ModelOpts = DEFAULT_OPTS, block_tables=None):
+              opts: ModelOpts = DEFAULT_OPTS, block_tables=None,
+              kernel_blocks=None):
     if cfg.is_encoder_decoder:
         return encdec_mod.encdec_decode_step(params, cfg, tokens, pos, caches,
                                              mesh=mesh, opts=opts)
     return tf_mod.decode_step(params, cfg, tokens, pos, caches,
-                              mesh=mesh, opts=opts, block_tables=block_tables)
+                              mesh=mesh, opts=opts, block_tables=block_tables,
+                              kernel_blocks=kernel_blocks)
 
 
 def chunk_prefill_fn(params, cfg: ModelConfig, tokens, positions, caches, *,

@@ -46,6 +46,11 @@ class ModelOpts:
     #: use the Pallas flash_decode kernel for (non-seq-sharded) decode
     #: attention -- streams the KV cache through VMEM once in bf16
     use_flash_decode: bool = False
+    #: paged decode attends pages in-kernel (block-table-native
+    #: flash-decode, kernels/flash_decode_paged.py) instead of gathering
+    #: the pool into a contiguous [B, n_blk*P] view first.  The gather
+    #: path stays available as the equivalence oracle (default)
+    use_paged_kernel: bool = False
 
 
 DEFAULT_OPTS = ModelOpts()

@@ -73,6 +73,7 @@ def forward(
     mesh=None,
     opts: ModelOpts = DEFAULT_OPTS,
     block_tables=None,
+    kernel_blocks=None,
 ):
     """tokens [B,S]; positions [B,S] (train/prefill/chunk) or [B] (decode).
 
@@ -84,7 +85,8 @@ def forward(
         x = jnp.concatenate([pre, x], axis=1)
     x, new_caches, aux = blocks_mod.apply_stack(
         params["stack"], cfg, x, positions, mode=mode, caches=caches,
-        mesh=mesh, opts=opts, block_tables=block_tables)
+        mesh=mesh, opts=opts, block_tables=block_tables,
+        kernel_blocks=kernel_blocks)
     return x, new_caches, aux
 
 
@@ -209,10 +211,15 @@ def decode_step(
     mesh=None,
     opts: ModelOpts = DEFAULT_OPTS,
     block_tables=None,
+    kernel_blocks=None,
 ):
-    """One decode step.  Returns (logits [B,V] f32, updated caches)."""
+    """One decode step.  Returns (logits [B,V] f32, updated caches).
+
+    ``kernel_blocks`` statically bounds the paged-kernel table walk to the
+    live-page bucket (ignored by the gather path)."""
     hidden, caches, _ = forward(params, cfg, tokens[:, None], pos, mode="decode",
                                 caches=caches, mesh=mesh, opts=opts,
-                                block_tables=block_tables)
+                                block_tables=block_tables,
+                                kernel_blocks=kernel_blocks)
     logits = lm_logits(params, cfg, hidden)[:, 0]
     return logits, caches

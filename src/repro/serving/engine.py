@@ -53,6 +53,7 @@ class Engine:
                  prefill_chunk: Optional[int] = None,
                  cache_layout: Optional[str] = None,
                  page_size: int = 16, num_pages: Optional[int] = None,
+                 use_kernel: Optional[bool] = None,
                  scheduler: str = "fifo", truncate_prompts: bool = False,
                  eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
                  mesh=None, seed: int = 0):
@@ -80,6 +81,13 @@ class Engine:
             raise ValueError("whole-prompt prefill (prefill_chunk=0) writes "
                              "through slot scatter; use cache_layout="
                              "'contiguous'")
+        # in-kernel paged decode (block-table-native flash-decode); the
+        # gather path stays as the equivalence oracle when False
+        self.use_kernel = (opts.use_paged_kernel if use_kernel is None
+                           else bool(use_kernel))
+        if self.use_kernel and cache_layout != "paged":
+            raise ValueError("use_kernel=True walks block tables; it needs "
+                             "cache_layout='paged'")
         # cap at the ring size: a chunk wider than the window would scatter
         # two positions into one ring slot within a single write
         self.prefill_chunk = (min(prefill_chunk or prefill_pad,
@@ -172,6 +180,12 @@ class Engine:
 
     def _first_token(self, t: Tracked, tok: int) -> None:
         """Account the prefill-sampled token; it may already terminate."""
+        if t.req.max_new_tokens <= 0:
+            # prompt-only request: nothing was asked for, so nothing is
+            # recorded -- it finishes with zero decode tokens and
+            # contributes no latency samples (percentiles stay NaN-free)
+            self._finish(t, "length")
+            return
         self.sched.record_token(t, tok)
         self.slot_budget[t.slot] -= 1
         done_eos = self.eos_id is not None and tok == self.eos_id
@@ -242,9 +256,13 @@ class Engine:
         for t in decoding:
             tokens[t.slot] = self.slot_last[t.slot]
             pos[t.slot] = self.slot_pos[t.slot]
+        kernel_blocks = (self.kv.live_blocks(pos)
+                         if self.use_kernel and self.kv.layout == "paged"
+                         else None)
         logits, self.kv.caches = self.runner.decode(
             jnp.asarray(tokens), jnp.asarray(pos), self.kv.caches,
-            self.kv.block_tables(), plan=self.plan_name)
+            self.kv.block_tables(), plan=self.plan_name,
+            use_kernel=self.use_kernel, kernel_blocks=kernel_blocks)
         self.key, sub = jax.random.split(self.key)
         nxt = np.asarray(sample_per_slot(logits, sub,
                                          jnp.asarray(self.slot_temp)))

@@ -91,19 +91,47 @@ class KVCache:
             return True
         return self.pages_needed(total_tokens) <= self.num_pages - 1
 
+    def live_blocks(self, slot_pos) -> int:
+        """Static walk bound for the in-kernel decode path: how many table
+        columns cover every page any live slot can attend right now.
+
+        Live positions occupy a prefix of the ring until it wraps (slot =
+        pos % S_buf), so ``ceil((max pos + 1) / P)`` clamped to the ring
+        size is exact; the result is rounded up to a power of two so the
+        number of compiled decode specializations stays O(log n_blk)
+        instead of one per context length.  ``slot_pos`` is the per-slot
+        current position array (-1 = idle).
+        """
+        assert self.layout == "paged", "live_blocks is a paged-only bound"
+        mx = max(1, min(int(np.max(slot_pos)) + 1, self.s_buf))
+        need = -(-mx // self.page_size)
+        bucket = 1
+        while bucket < need:
+            bucket *= 2
+        return min(bucket, self.blocks_per_slot)
+
     # ------------------------------------------------------------------ #
     # Slot lifecycle
     # ------------------------------------------------------------------ #
     def allocate(self, slot: int, total_tokens: int) -> bool:
-        """Reserve pages for a request's whole lifetime; False if pool full."""
+        """Reserve pages for a request's whole lifetime; False if pool full.
+
+        A failed reservation (including one that runs out of free pages
+        midway) rolls back every page already taken, so the pool is left
+        exactly as found -- the invariant is structural, not dependent on
+        ``pages_needed`` agreeing with the loop below.
+        """
         if self.layout != "paged":
             self._clear_contiguous_slot(slot)
             return True
-        need = self.pages_needed(total_tokens)
-        if need > len(self._free):
-            return False
         assert not self._owned[slot], f"slot {slot} already allocated"
-        pages = [self._free.pop() for _ in range(need)]
+        need = self.pages_needed(total_tokens)
+        pages: List[int] = []
+        for _ in range(need):
+            if not self._free:
+                self._free.extend(reversed(pages))      # roll back, no leak
+                return False
+            pages.append(self._free.pop())
         self._owned[slot] = pages
         self.table[slot, :need] = pages
         self._table_dev = None

@@ -2,9 +2,14 @@
 
 The runner owns the parameters and every jitted graph the engine steps
 through.  Graphs are cached in a specialization table keyed by
-``(plan, kind, width)``:
+``(plan, kind, width, ...)``:
 
-* ``(plan, "decode", B)``       -- one-token step over all B slots;
+* ``(plan, "decode", B, use_kernel, n_blocks)`` -- one-token step over all
+  B slots.  ``use_kernel`` switches paged decode between the gather oracle
+  and the block-table-native flash-decode kernel; ``n_blocks`` is the
+  kernel's static live-page walk bound (a power-of-two bucket from
+  ``KVCache.live_blocks``), so a growing context steps through at most
+  O(log n_blk) graphs while short contexts never pay full-table traffic;
 * ``(plan, "chunk", C)``        -- fixed-width ``[B, C]`` chunked-prefill
   step: every prompt, whatever its length, runs through this single graph
   (no more jit-per-padded-length);
@@ -21,6 +26,7 @@ specializations -- no engine rebuild, no weight re-init.
 
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -68,15 +74,26 @@ class ModelRunner:
     # Steps
     # ------------------------------------------------------------------ #
     def decode(self, tokens, pos, caches, block_tables=None, *,
-               plan: str = BASE_PLAN):
-        """One decode step over all slots -> (logits [B,V], caches)."""
+               plan: str = BASE_PLAN, use_kernel: Optional[bool] = None,
+               kernel_blocks: Optional[int] = None):
+        """One decode step over all slots -> (logits [B,V], caches).
+
+        ``use_kernel`` (None -> ``opts.use_paged_kernel``) selects the
+        block-table-native paged flash-decode; ``kernel_blocks`` is its
+        static walk bound.  Both join the specialization key.
+        """
         cfg, params = self.plans[plan]
-        key = (plan, "decode", int(tokens.shape[0]))
+        uk = self.opts.use_paged_kernel if use_kernel is None else bool(use_kernel)
+        if block_tables is None:            # contiguous layout: gather-free
+            uk, kernel_blocks = False, None
+        key = (plan, "decode", int(tokens.shape[0]), uk, kernel_blocks)
         if key not in self._jit:
+            opts = replace(self.opts, use_paged_kernel=uk)
+            kb = kernel_blocks
             self._jit[key] = jax.jit(
                 lambda p, t, po, c, bt: models.decode_fn(
                     p, cfg, t, po, c, block_tables=bt, mesh=self.mesh,
-                    opts=self.opts))
+                    opts=opts, kernel_blocks=kb))
         return self._jit[key](params, tokens, pos, caches, block_tables)
 
     def chunk_prefill(self, tokens, positions, last_index, caches,

@@ -146,16 +146,25 @@ class Scheduler:
     def percentiles(self, over: Optional[Sequence[Tracked]] = None
                     ) -> Dict[str, float]:
         """p50/p95 time-to-first-token (s) and decode tokens/s over finished
-        requests (rejected requests excluded -- they never produced a token)."""
+        requests.
+
+        NaN-free by construction: requests that never produced a token
+        (rejected, prompt-only) contribute no samples at all; requests that
+        finished with zero *decode* tokens (immediate EOS / budget 1 -- only
+        the prefill-sampled token exists) contribute a TTFT sample but no
+        decode-rate sample, since a single token spans no decode interval.
+        A key is present iff at least one finite sample backs it.
+        """
         recs = [t.result for t in (self.finished if over is None else over)
                 if t.result.tokens]
         out: Dict[str, float] = {}
-        if not recs:
-            return out
-        ttft = np.array([r.ttft_s for r in recs])       # set by finish()
-        out["ttft_p50_s"] = float(np.percentile(ttft, 50))
-        out["ttft_p95_s"] = float(np.percentile(ttft, 95))
-        tps = np.array([r.decode_tps for r in recs if r.decode_tps > 0])
+        ttft = np.array([r.ttft_s for r in recs], np.float64)
+        ttft = ttft[np.isfinite(ttft)]
+        if ttft.size:
+            out["ttft_p50_s"] = float(np.percentile(ttft, 50))
+            out["ttft_p95_s"] = float(np.percentile(ttft, 95))
+        tps = np.array([r.decode_tps for r in recs], np.float64)
+        tps = tps[np.isfinite(tps) & (tps > 0)]
         if tps.size:
             out["decode_tps_p50"] = float(np.percentile(tps, 50))
             out["decode_tps_p95"] = float(np.percentile(tps, 95))

@@ -241,7 +241,14 @@ _CACHE_RANKS = (
 
 # paged-pool leaves: dim0 is the shared page pool, NOT a batch dim -- it is
 # never data-sharded (every data shard reads every page through its block
-# table); kv heads still shard over `model`.
+# table); kv heads still shard over `model`.  This layout is what lets the
+# block-table-native decode kernel (kernels/flash_decode_paged.py) run
+# per-shard: each model shard walks the same table over its kv-head slice
+# of every page, with no cross-shard page exchange.
+# Block tables (and their truncated live views) are replicated: every
+# shard -- data or model -- walks the same page indices.  They enter the
+# step functions as plain (unconstrained) arguments, so jit's default
+# replication is the contract; nothing here may ever shard them.
 _PAGED_RANKS = (
     (re.compile(r"(^|/)(kp|vp)$"), 4),            # [N, P, Hkv, hd]
     (re.compile(r"(^|/)posp$"), 2),               # [N, P]

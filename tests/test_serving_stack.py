@@ -131,6 +131,44 @@ class TestLayoutEquivalence:
         assert outs["paged"] == outs["contiguous"]
 
 
+class TestPagedKernelServing:
+    def test_kernel_matches_gather_oracle(self, setup):
+        """use_kernel=True (block-table-native decode) is token-identical
+        to the gather path on the same workload."""
+        cfg, params = setup
+        outs = {}
+        for uk in (False, True):
+            eng = Engine(cfg, params, max_batch=3, max_len=64,
+                         prefill_chunk=4, cache_layout="paged", page_size=8,
+                         use_kernel=uk)
+            outs[uk] = [r.tokens for r in
+                        eng.serve(mixed_requests(cfg.vocab_size))]
+        assert outs[True] == outs[False]
+        # the kernel's walk bound stays a pow2 bucket of the live context
+        dec = [k for k in eng.runner.compiled_specializations()
+               if k[1] == "decode"]
+        assert {k[4] for k in dec} <= {1, 2, 4, 8}
+
+    def test_moe_kernel_matches_gather_oracle(self):
+        """Dropless MoE dispatch composed with in-kernel paged decode."""
+        cfg = moe_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        outs = {}
+        for uk in (False, True):
+            eng = Engine(cfg, params, max_batch=2, max_len=64,
+                         prefill_chunk=4, use_kernel=uk)
+            outs[uk] = [r.tokens for r in
+                        eng.serve(mixed_requests(cfg.vocab_size,
+                                                 lens=(5, 11)))]
+        assert outs[True] == outs[False]
+
+    def test_use_kernel_requires_paged_layout(self, setup):
+        cfg, params = setup
+        with pytest.raises(ValueError, match="paged"):
+            Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4,
+                   cache_layout="contiguous", use_kernel=True)
+
+
 class TestBlockRecycling:
     def test_pages_recycled_across_requests(self, setup):
         """A pool far smaller than max_batch x max_len still serves the
@@ -162,6 +200,43 @@ class TestBlockRecycling:
                        cache_layout="paged", page_size=8, num_pages=3)
         alone = fresh.serve([Request(uid=1, prompt=p2, max_new_tokens=6)])
         assert second[0].tokens == alone[0].tokens
+
+    def test_failed_reservation_rolls_back_midway_pages(self, setup):
+        """A multi-page reservation that cannot complete must leave the
+        pool exactly as it found it -- no leaked pages, no table writes."""
+        cfg, _ = setup
+        kv = KVCache(cfg, max_batch=4, max_len=64, layout="paged",
+                     page_size=8, num_pages=5)
+        assert kv.allocate(0, 17)                       # 3 pages
+        free_before = kv.free_pages()
+        table_before = kv.table.copy()
+        in_use = kv.stats["pages_in_use"]
+        # needs 5 pages with only 2 free: runs out midway, must roll back
+        assert not kv.allocate(1, 33)
+        assert kv.free_pages() == free_before
+        assert (kv.table == table_before).all()
+        assert kv.stats["pages_in_use"] == in_use
+
+    def test_exhaust_then_drain_conserves_pool(self, setup):
+        """Exhaust the pool, drain it, and re-fill it whole: every page
+        comes back and recycled tables are fully unmapped."""
+        cfg, _ = setup
+        from repro.models.attention import TRASH_PAGE
+        kv = KVCache(cfg, max_batch=4, max_len=64, layout="paged",
+                     page_size=8, num_pages=5)
+        assert kv.allocate(0, 24)                       # 3 pages
+        assert kv.allocate(1, 16)                       # 2 pages -> empty
+        assert kv.free_pages() == 0
+        assert not kv.allocate(2, 1)                    # nothing left
+        kv.release(0)
+        kv.release(1)
+        assert kv.free_pages() == 5
+        assert kv.stats["pages_in_use"] == 0
+        assert (kv.table == TRASH_PAGE).all()
+        assert kv.allocate(2, 40)                       # whole pool at once
+        assert kv.free_pages() == 0
+        kv.release(2)
+        assert kv.free_pages() == 5
 
     def test_oversized_request_rejected(self, setup):
         cfg, params = setup
@@ -324,6 +399,43 @@ class TestMultiPlanServing:
                           prefill_chunk=4)
             assert [r.tokens for r in solo.serve(reqs())] == got[name], name
 
+    def test_interleaved_plan_streams_match_single_plan_runs(self):
+        """Plan hot-swap under a stream of workloads: interleaving
+        serve(plan=...) calls (in-kernel decode on) must leave every
+        workload byte-identical to a dedicated single-plan engine -- no
+        state bleeding through the shared runner, weights, or KV pool."""
+        cfg = moe_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        n = cfg.num_moe_layers
+        plans = {"a": uniform_plan(cfg, 1),
+                 "b": LexiPlan(arch=cfg.name, budget=n + 1,
+                               plan=(1,) * (n - 1) + (2,), fitness=0.0,
+                               method="uniform", k_base=cfg.moe_top_k)}
+        reqs = lambda: mixed_requests(cfg.vocab_size, lens=(5, 9), max_new=4)
+        ekw = dict(max_batch=2, max_len=64, prefill_chunk=4, use_kernel=True)
+
+        eng = Engine(cfg, params, **ekw)
+        for name, plan in plans.items():
+            eng.add_plan(name, plan)
+        got: dict = {}
+        for name in ("a", "b", "a", "b", "b", "a"):     # interleaved stream
+            toks = [r.tokens for r in eng.serve(reqs(), plan=name)]
+            assert got.setdefault(name, toks) == toks, name
+        for name, plan in plans.items():
+            cfg_p, params_p = apply_plan_params(params, cfg, plan)
+            solo = Engine(cfg_p, params_p, **ekw)
+            assert [r.tokens for r in solo.serve(reqs())] == got[name], name
+
+    def test_plan_switch_refused_with_requests_in_flight(self):
+        """set_plan mid-flight must refuse, not corrupt live state."""
+        cfg = moe_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        eng.add_plan("k1", uniform_plan(cfg, 1))
+        eng.sched.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32)))
+        with pytest.raises(RuntimeError, match="in flight"):
+            eng.set_plan("k1")
+
     def test_plan_does_not_stick_across_serves(self):
         """serve() without plan= must revert to the base specialization,
         not silently keep the previously selected plan."""
@@ -368,6 +480,56 @@ class TestLatencyStats:
             assert k in eng.stats and eng.stats[k] > 0
         assert all(r.ttft_s > 0 for r in out)
         assert all(r.decode_tps > 0 for r in out)
+
+    def test_zero_decode_token_requests_keep_stats_nan_free(self, setup):
+        """Immediate EOS: the request ends on its prefill-sampled token
+        (zero decode tokens).  It contributes a TTFT sample but no decode
+        rate, and nothing in the stats may be NaN."""
+        import math
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        probe = eng.serve([Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                                   max_new_tokens=4)])
+        eos = probe[0].tokens[0]                        # greedy first token
+        eng2 = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4,
+                      eos_id=int(eos))
+        out = eng2.serve([Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                                  max_new_tokens=4)])
+        assert out[0].finished_reason == "eos" and len(out[0].tokens) == 1
+        assert "ttft_p50_s" in eng2.stats
+        assert "decode_tps_p50" not in eng2.stats       # no decode interval
+        assert all(math.isfinite(v) for v in eng2.stats.values())
+
+    def test_prompt_only_request_completes_with_zero_tokens(self, setup):
+        """max_new_tokens=0 (prompt-only) finishes cleanly with an empty
+        token list and contributes no latency samples."""
+        import math
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        out = eng.serve([Request(uid=0, prompt=np.arange(6, dtype=np.int32),
+                                 max_new_tokens=0),
+                         Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                                 max_new_tokens=3)])
+        assert out[0].tokens == [] and out[0].finished_reason == "length"
+        assert len(out[1].tokens) == 3                  # neighbor unaffected
+        assert all(math.isfinite(v) for v in eng.stats.values())
+
+    def test_percentiles_filter_non_finite_records(self):
+        """Defense in depth: a poisoned latency record (NaN/inf) must not
+        leak into the reported percentiles."""
+        import math
+        s = Scheduler(max_batch=2)
+        for uid, tps in ((0, 5.0), (1, float("nan"))):
+            t = s.submit(Request(uid=uid, prompt=np.zeros(2, np.int32)))
+            s.admit(lambda slot, tr: True)
+            s.record_token(t, 1)
+            s.record_token(t, 2)
+            s.finish(t, "length")
+            t.result.decode_tps = tps
+        t.result.ttft_s = float("inf")
+        stats = s.percentiles()
+        assert stats and all(math.isfinite(v) for v in stats.values())
+        assert stats["decode_tps_p50"] == pytest.approx(5.0)
 
     def test_stale_percentiles_cleared_between_serves(self, setup):
         """An all-rejected workload must not report the previous workload's
