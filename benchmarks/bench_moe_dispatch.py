@@ -1,4 +1,5 @@
-"""Dispatch-impl throughput matrix: dense vs gmm across top-k.
+"""Dispatch-impl throughput matrix: dense vs gmm across top-k, plus the
+decode-regime ablation for the fused routed-expert path.
 
 Records the perf trajectory of the dispatch refactor: tokens/s of one jitted
 MoE layer under the capacity-buffer path (``dense``) and the sort-based
@@ -6,6 +7,14 @@ dropless path (``gmm``) at several top-k values, written to
 ``BENCH_moe_dispatch.json`` so successive PRs can diff the curve.  The
 layer/workload is shared with ``bench_moe_topk`` (fig2) so the curves stay
 comparable.
+
+``decode_ablation`` (DESIGN.md §5) measures the serving decode regime as
+interleaved-A/B medians (the stable-signal pattern from the PR-3 serving
+ablation): (a) the fused ``decode`` impl vs ``gmm`` at decode-shaped token
+counts, and (b) a multi-layer decode MoE step under per-layer-k plans of
+decreasing budget -- step time must fall monotonically as a LExI-style plan
+lowers per-layer k, which is the paper's decode-throughput claim on this
+layer stack.
 """
 
 from __future__ import annotations
@@ -17,9 +26,91 @@ import jax
 
 from benchmarks.bench_moe_topk import IMPL_FNS, layer_flops_per_token, \
     layer_setup
-from benchmarks.common import CSV, time_us
+from benchmarks.common import CSV, interleaved_us, time_us
+from repro.models.moe import moe_decode, moe_gmm
 
 OUT_PATH = os.environ.get("BENCH_MOE_DISPATCH_OUT", "BENCH_moe_dispatch.json")
+
+
+def _decode_ablation(csv: CSV, *, fast: bool) -> dict:
+    """Decode-regime cells, interleaved A/B medians.
+
+    Measured on a serving-shaped expert pool (``E=64``, OLMoE-like: top-8
+    of 64), not the fig2 matrix's E=16: what makes the gmm path pathological
+    at decode is that ``T*k`` copies land on *mostly distinct* experts, so
+    nearly every expert group pads to a full, mostly-empty row tile
+    (worst-case ``E*(bm-1)`` padding rows for ``T*k`` real ones).  With few
+    experts and k close to E, the sorted layout instead *amortizes* shared
+    weight blocks across tokens and gmm stays the right call -- that regime
+    is the prefill matrix above, and it is why the auto-switch keys on
+    token count, not on a universal "decode is always fused".
+    """
+    batch = 8                       # serving decode step: B single tokens
+    iters = 30 if fast else 80
+    from repro import models
+    from repro.configs import get_config
+    from repro.core import iter_moe_layer_params
+    cfg = get_config("olmoe-1b-7b").reduced().with_(
+        num_experts=64, moe_top_k=8, moe_d_ff=128, d_model=256,
+        dtype="float32")
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+    _, mp = next(iter_moe_layer_params(params, cfg))
+    k_full = cfg.moe_top_k          # 8
+
+    out = {"tokens_decode": batch, "iters": iters, "top_k": k_full,
+           "num_experts": cfg.num_experts,
+           "method": "interleaved A/B steps, median per call"}
+
+    # (a) fused routed-expert path vs the sort-based gmm dispatch at
+    # decode-shaped T -- same router, same weights, same top-k
+    for t in (1, batch):
+        x = jax.random.normal(jax.random.PRNGKey(t), (t, cfg.d_model))
+        fns = {
+            "gmm": jax.jit(lambda p, xx: moe_gmm(p, cfg, xx, k_full)[0]),
+            "decode": jax.jit(lambda p, xx: moe_decode(p, cfg, xx, k_full)[0]),
+        }
+        med = interleaved_us(
+            {name: (lambda f=f, xx=x: f(mp, xx)) for name, f in fns.items()},
+            iters=iters)
+        speedup = med["gmm"] / max(med["decode"], 1e-9)
+        out[f"T{t}"] = {"gmm_us": round(med["gmm"], 1),
+                        "decode_us": round(med["decode"], 1),
+                        "speedup_decode_vs_gmm": round(speedup, 3)}
+        for name, us in med.items():
+            csv.add(f"dispatch/decode_T{t}_{name}", us,
+                    f"speedup_vs_gmm={speedup:.2f}" if name == "decode" else "")
+
+    # (b) plan ladder: a 4-layer decode-shaped MoE step (layers share the
+    # measured weights; only per-layer k differs).  Budgets decrease down
+    # the ladder, so the measured step time must too.
+    plans = (("uniform_k8", (8, 8, 8, 8)),
+             ("lexi_mid", (8, 4, 4, 2)),
+             ("lexi_low", (4, 2, 2, 1)))
+    x = jax.random.normal(jax.random.PRNGKey(0), (batch, cfg.d_model))
+
+    def plan_fn(plan):
+        def f(p, xx):
+            for kk in plan:
+                xx = moe_decode(p, cfg, xx, kk)[0]
+            return xx
+        return jax.jit(f)
+
+    fns = {name: plan_fn(plan) for name, plan in plans}
+    med = interleaved_us(
+        {name: (lambda f=f: f(mp, x)) for name, f in fns.items()},
+        iters=iters)
+    ladder = []
+    for name, plan in plans:
+        ladder.append({"name": name, "plan": list(plan),
+                       "active_k_sum": sum(plan),
+                       "step_us": round(med[name], 1)})
+        csv.add(f"dispatch/decode_plan_{name}", med[name],
+                f"k_sum={sum(plan)}")
+    out["plan_ladder"] = ladder
+    out["step_time_monotone_in_budget"] = all(
+        hi["step_us"] >= lo["step_us"]
+        for hi, lo in zip(ladder, ladder[1:]))
+    return out
 
 
 def run(csv: CSV, *, fast: bool = False, tokens: int = 0,
@@ -42,10 +133,12 @@ def run(csv: CSV, *, fast: bool = False, tokens: int = 0,
                             "tokens_per_s": round(tok_s, 1),
                             "flops_per_tok": flops})
 
+    abl = _decode_ablation(csv, fast=fast)
+
     with open(out_path, "w") as f:
         json.dump({"bench": "moe_dispatch", "d_model": cfg.d_model,
                    "num_experts": cfg.num_experts, "moe_d_ff": cfg.moe_d_ff,
-                   "entries": entries}, f, indent=1)
+                   "entries": entries, "decode_ablation": abl}, f, indent=1)
     print(f"# wrote {out_path}", flush=True)
 
 

@@ -21,6 +21,29 @@ def time_us(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
     return float(np.median(times))
 
 
+def interleaved_us(thunks: Dict[str, Callable[[], object]], *,
+                   iters: int = 10, warmup: int = 2) -> Dict[str, float]:
+    """Median wall time (us) per named thunk, calls interleaved A/B/A/B...
+
+    The stable-signal pattern from the PR-3 serving ablation: on a shared
+    host, timing each candidate in its own contiguous window attributes
+    whatever the machine was doing during that window to the candidate
+    (single-serve cells historically swung +/-40% run-to-run).
+    Interleaving makes slow-host drift hit every candidate equally, and
+    the per-call median discards the remaining spikes.
+    """
+    for _ in range(warmup):
+        for th in thunks.values():
+            jax.block_until_ready(th())
+    times: Dict[str, List[float]] = {name: [] for name in thunks}
+    for _ in range(iters):
+        for name, th in thunks.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(th())
+            times[name].append((time.perf_counter() - t0) * 1e6)
+    return {name: float(np.median(ts)) for name, ts in times.items()}
+
+
 class CSV:
     """Collects ``name,us_per_call,derived`` rows (assignment format)."""
 

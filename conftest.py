@@ -48,6 +48,15 @@ except ImportError:
     def _floats(min_value, max_value, **_kw):
         return _Strategy(min_value, max_value, float)
 
+    class _BoolStrategy:
+        def draw(self, rng, i):
+            if i < 2:
+                return bool(i)          # endpoints first: False, True
+            return rng.random() < 0.5
+
+    def _booleans():
+        return _BoolStrategy()
+
     def _given(*strats):
         def deco(fn):
             def wrapper(*args, **kwargs):
@@ -79,6 +88,7 @@ except ImportError:
     _st = types.ModuleType("hypothesis.strategies")
     _st.integers = _integers
     _st.floats = _floats
+    _st.booleans = _booleans
     _h.strategies = _st
     sys.modules["hypothesis"] = _h
     sys.modules["hypothesis.strategies"] = _st

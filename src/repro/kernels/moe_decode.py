@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused routed-expert SwiGLU for decode-shaped MoE batches.
+
+The serving decode step routes ``B ~ 8`` single tokens per step.  The
+sort-based ``gmm`` dispatch built for prefill-scale ``T`` (argsort the
+token copies, scatter them into a packed ``[M, D]`` buffer whose expert
+groups are padded to the row tile) is the wrong shape regime there: with
+``T*k`` copies spread over up to ``E`` experts, almost every row tile is
+padding, and the argsort/scatter/unsort machinery costs more than the
+expert math it organizes.  This kernel drops the dispatch stage entirely:
+
+  * the router's top-k expert ids ``idx [B, k]`` ride in through
+    ``PrefetchScalarGridSpec`` (the scheme ``kernels/moe_gmm.py`` and
+    ``kernels/flash_decode_paged.py`` use), so BlockSpec index maps DMA
+    exactly the *routed* experts' weight tiles -- expert ``idx[b, j]``'s
+    ``w1``/``w2`` slices per ``(token, slot, f-step)`` grid cell.  No sort
+    plan, no ``[M, D]`` packed buffer, no tiles that exist only to pad an
+    expert group;
+  * top-k selection itself happens one level up (``models/moe/router.py``):
+    scalar-prefetched ids must exist *before* the kernel body runs, and
+    ``route()`` stays the single source of truth for scores, renorm and the
+    NAEE skipping baseline, so every impl stays numerically interchangeable;
+  * the per-token combine weight is applied to each partial product inside
+    the kernel and accumulated in f32 VMEM scratch across the ``k`` slots
+    and f-steps -- router-weighted combine fused with compute, flushed once
+    per token;
+  * ``k`` is a **static** specialization (the grid is ``(B, k, F/bf)``): a
+    LExI plan's per-layer expert counts change the number of grid cells --
+    i.e. the issued FLOPs -- directly, which is what converts a plan into
+    decode wall-clock rather than dispatch-overhead noise.
+
+Work is O(B * k * D * F) with no padding term; the gmm path's is
+O((B*k + E*(bm-1)) * D * F) plus the sort machinery.  The crossover back to
+``gmm`` comes at prefill-scale ``T``, where per-expert row tiles amortize
+weight DMA over many tokens (``models/moe/registry.py`` holds the
+auto-switch threshold; DESIGN.md §5 has the contract).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, x_ref, w_ref, w1_ref, w2_ref, o_ref, acc_ref, *,
+            n_k_slots: int, n_f_steps: int):
+    """One (token, k-slot, f-step) grid cell.
+
+    idx_ref               scalar-prefetch ref (consumed by the index maps)
+    x_ref   [1, D]        this token's activations
+    w_ref   [1, 1]        router combine weight of (token, slot)
+    w1_ref  [1, D, 2, bf] fused gate/up slice of expert idx[b, j]
+    w2_ref  [1, bf, D]    down-projection slice of expert idx[b, j]
+    o_ref   [1, D]        output row (written at the last slot + f-step)
+    acc_ref [1, D] f32    VMEM accumulator across slots and f-steps
+    """
+    del idx_ref
+    j = pl.program_id(1)
+    fi = pl.program_id(2)
+
+    @pl.when((j == 0) & (fi == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                        # [1, D]
+    gate_w = w1_ref[0, :, 0, :].astype(jnp.float32)           # [D, bf]
+    up_w = w1_ref[0, :, 1, :].astype(jnp.float32)
+    gate = jax.lax.dot(x, gate_w, precision=jax.lax.Precision.DEFAULT)
+    up = jax.lax.dot(x, up_w, precision=jax.lax.Precision.DEFAULT)
+    h = jax.nn.silu(gate) * up                                # [1, bf]
+    partial = jax.lax.dot(h, w2_ref[0].astype(jnp.float32))   # [1, D]
+    acc_ref[...] += w_ref[0, 0] * partial
+
+    @pl.when((j == n_k_slots - 1) & (fi == n_f_steps - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_decode_pallas(x, w1, w2, idx, weights, *, block_f: int = 256,
+                      interpret: bool = False):
+    """Fused routed-expert SwiGLU with in-kernel weighted combine.
+
+    x [B, D]; w1 [E, D, 2F]; w2 [E, F, D]; idx [B, k] i32 in [0, E);
+    weights [B, k] f32 router combine weights -> y [B, D] in x.dtype.
+
+    Only the routed experts' weight tiles are read: ``idx`` is scalar-
+    prefetched so the BlockSpec index maps DMA expert ``idx[b, j]``'s
+    slices per grid cell.  ``k`` (= idx.shape[1]) is static -- per-layer k
+    from a LExI plan compiles to a proportionally smaller grid.
+    """
+    b, d = x.shape
+    e, f = w2.shape[0], w2.shape[1]
+    k = idx.shape[1]
+    assert w1.shape == (e, d, 2 * f), (w1.shape, (e, d, 2 * f))
+    assert idx.shape == (b, k) and weights.shape == (b, k), \
+        (idx.shape, weights.shape)
+    bf = min(block_f, f)
+    while f % bf:
+        bf //= 2
+    bf = max(bf, 1)
+    n_f = f // bf
+
+    w1v = w1.reshape(e, d, 2, f)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k, n_f),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b_, j_, fi, idx: (b_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, j_, fi, idx: (b_, j_)),
+            pl.BlockSpec((1, d, 2, bf),
+                         lambda b_, j_, fi, idx: (idx[b_, j_], 0, 0, fi)),
+            pl.BlockSpec((1, bf, d),
+                         lambda b_, j_, fi, idx: (idx[b_, j_], fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b_, j_, fi, idx: (b_, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k_slots=k, n_f_steps=n_f),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x, weights.astype(jnp.float32), w1v, w2)
+
+
+def moe_decode_routed_jnp(x, w1, w2, idx, weights):
+    """jnp path with identical semantics (CPU fallback / non-kernel impl).
+
+    Gathers the k routed experts' weight blocks per token and contracts in
+    f32 -- the same O(B*k*D*F) work the kernel issues, spelled as XLA ops.
+    The weight gather materializes [B, k, D, 2F] copies, which is exactly
+    the traffic the TPU kernel's per-expert DMA avoids; at decode-shaped B
+    it is still far below the gmm path's padded-tile buffer.
+    """
+    w1g = jnp.take(w1, idx, axis=0)                           # [B, k, D, 2F]
+    w2g = jnp.take(w2, idx, axis=0)                           # [B, k, F, D]
+    h = jnp.einsum("bd,bkdf->bkf", x.astype(jnp.float32),
+                   w1g.astype(jnp.float32))
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up                                # [B, k, F]
+    y = jnp.einsum("bkf,bkfd,bk->bd", h, w2g.astype(jnp.float32),
+                   weights.astype(jnp.float32))
+    return y.astype(x.dtype)

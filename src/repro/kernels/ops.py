@@ -42,6 +42,26 @@ def moe_gmm(xs, w1, w2, tile_expert, tile_valid, *, block_m: int,
                           interpret=_interpret())
 
 
+@jax.jit
+def moe_decode(x, w1, w2, idx, weights):
+    """Fused routed-expert decode MoE: x [B, D], w1 [E, D, 2F], w2 [E, F, D],
+    idx [B, k] i32, weights [B, k] -> [B, D].
+
+    On TPU this is the Mosaic kernel DMA'ing each routed expert's weight
+    tiles via scalar-prefetched ids (no sort plan, no packed buffer).
+    Off-TPU it runs the jnp gather path with *identical semantics* instead
+    of the interpreted kernel: interpret-mode grid iteration pays Python
+    per (token, slot, f-step) cell, while the gather is one fused XLA op.
+    The kernel body itself is validated in interpret mode by
+    tests/test_moe_decode.py.
+    """
+    from repro.kernels.moe_decode import moe_decode_pallas, \
+        moe_decode_routed_jnp
+    if _interpret():
+        return moe_decode_routed_jnp(x, w1, w2, idx, weights)
+    return moe_decode_pallas(x, w1, w2, idx, weights, interpret=False)
+
+
 @partial(jax.jit, static_argnames=("window", "block_q", "block_k"))
 def flash_attention_bhsd(q, k, v, *, window=None, block_q: int = 512,
                          block_k: int = 512):

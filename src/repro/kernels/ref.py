@@ -1,9 +1,15 @@
-"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+``moe_decode_ref`` is numpy/float64: jax arrays silently stay f32 without
+the x64 flag, and the decode-MoE harness wants a genuinely higher-precision
+reference to pin both the kernel and the jnp fallback against.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def moe_ffn_ref(xe, w1, w2):
@@ -36,6 +42,31 @@ def moe_gmm_ref(xs, w1, w2, group_sizes):
         y = (jax.nn.silu(gate) * up) @ w2[ei].astype(jnp.float32)
         out = jnp.where(sel[:, None], y, out)
     return out.astype(xs.dtype)
+
+
+def moe_decode_ref(x, w1, w2, idx, weights):
+    """Routed-expert decode MoE, numpy float64 oracle.
+
+    x [B, D], w1 [E, D, 2F], w2 [E, F, D], idx [B, k] i32, weights [B, k]
+    -> [B, D] f64.  Per token: sum_j weights[b, j] * SwiGLU(x[b]; expert
+    idx[b, j]) -- the ground truth for ``kernels/moe_decode.py`` and its
+    jnp fallback (which accumulate in f32).
+    """
+    x64 = np.asarray(x, np.float64)
+    w1_ = np.asarray(w1, np.float64)
+    w2_ = np.asarray(w2, np.float64)
+    idx_ = np.asarray(idx)
+    w_ = np.asarray(weights, np.float64)
+    b, k = idx_.shape
+    out = np.zeros((b, x64.shape[1]), np.float64)
+    for bi in range(b):
+        for j in range(k):
+            ei = int(idx_[bi, j])
+            h = x64[bi] @ w1_[ei]
+            gate, up = np.split(h, 2)
+            silu = gate / (1.0 + np.exp(-gate))
+            out[bi] += w_[bi, j] * ((silu * up) @ w2_[ei])
+    return out
 
 
 def flash_decode_ref(q, k, v, pos, cur_pos, *, window=None):

@@ -25,11 +25,13 @@ from repro.serving import Engine, Request
 
 
 def synth_requests(n: int, vocab: int, *, lo: int = 8, hi: int = 48,
-                   max_new: int = 32, seed: int = 0):
+                   max_new: int = 32, seed: int = 0, temperature: float = 0.0,
+                   top_k: int = 0):
     rng = np.random.default_rng(seed)
     return [Request(uid=i,
                     prompt=rng.integers(0, vocab, rng.integers(lo, hi)).astype(np.int32),
-                    max_new_tokens=max_new)
+                    max_new_tokens=max_new, temperature=temperature,
+                    top_k=top_k)
             for i in range(n)]
 
 
@@ -59,6 +61,14 @@ def main() -> int:
     ap.add_argument("--use-kernel", action="store_true",
                     help="paged decode attends pages in-kernel (block-table-"
                          "native flash-decode) instead of gathering")
+    ap.add_argument("--use-moe-decode", action="store_true",
+                    help="decode steps run MoE through the fused "
+                         "routed-expert path (no sort plan) instead of the "
+                         "gmm dispatch")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k sampling cap (0 = no cap; only "
+                         "matters with a temperature > 0)")
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--scheduler", choices=["fifo", "sjf"], default="fifo")
     ap.add_argument("--lexi-budget-frac", type=float, default=None,
                     help="search a plan inline at this active-expert budget")
@@ -73,13 +83,15 @@ def main() -> int:
     if args.reduced:
         cfg = cfg.reduced()
     params = models.init_params(jax.random.PRNGKey(args.seed), cfg)
-    reqs = synth_requests(args.requests, cfg.vocab_size,
-                          max_new=args.max_new, seed=args.seed)
+    req_kw = dict(max_new=args.max_new, seed=args.seed,
+                  temperature=args.temperature, top_k=args.top_k)
+    reqs = synth_requests(args.requests, cfg.vocab_size, **req_kw)
 
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
                  prefill_chunk=args.prefill_chunk,
                  cache_layout=args.cache_layout,
                  use_kernel=args.use_kernel or None,
+                 use_moe_decode=args.use_moe_decode or None,
                  scheduler=args.scheduler)
     print(f"arch={cfg.name} baseline top-k={cfg.moe_top_k or 'n/a'} "
           f"layout={eng.kv.layout} chunk={eng.prefill_chunk or 'whole'}")
@@ -104,8 +116,7 @@ def main() -> int:
     if plan is not None:
         eng.add_plan("lexi", plan)      # same runner, same weights
         print(f"LExI plan (B={plan.budget}): {plan.plan}")
-        reqs = synth_requests(args.requests, cfg.vocab_size,
-                              max_new=args.max_new, seed=args.seed)
+        reqs = synth_requests(args.requests, cfg.vocab_size, **req_kw)
         eng.serve(reqs, plan="lexi")
         tput2 = _report("LExI", eng)
         print(f"speedup: {tput2 / tput:.2f}x at "

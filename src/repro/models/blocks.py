@@ -134,7 +134,9 @@ def apply_block(
         y, aux = moe_mod.moe(params["moe"], cfg, h2, spec.moe_top_k,
                              impl=impl, mesh=mesh,
                              use_kernel=opts.use_moe_kernel,
-                             a2a_chunks=opts.a2a_chunks)
+                             a2a_chunks=opts.a2a_chunks,
+                             decode_kernel=(opts.use_moe_decode_kernel
+                                            and mode == "decode"))
         x = x + y
     else:
         x = x + mlp(params["mlp"], h2)

@@ -6,7 +6,8 @@ Structured as a ``Router -> Dispatch -> Compute -> Combine`` pipeline:
   ``dispatch.py``  token movement: capacity buffers + sort-based dropless
   ``compute.py``   expert SwiGLU over each layout (jnp or Pallas kernel)
   ``dense.py``     GShard capacity-buffer impl (reference / small scale)
-  ``gmm.py``       sort-based dropless impl (production inference path)
+  ``gmm.py``       sort-based dropless impl (production prefill path)
+  ``decode.py``    fused routed-expert impl (production decode path)
   ``ep.py``        shard_map expert parallelism (a2a train, psum decode)
   ``registry.py``  impl registry + the public ``moe()`` entry
 
@@ -16,7 +17,13 @@ numerically equivalent up to capacity drops (``gmm`` is exactly dropless)
 and are pinned against each other in tests.
 """
 
-from repro.models.moe.compute import add_shared, expert_ffn, grouped_ffn  # noqa: F401
+from repro.models.moe.compute import (  # noqa: F401
+    add_shared,
+    expert_ffn,
+    grouped_ffn,
+    routed_ffn,
+)
+from repro.models.moe.decode import moe_decode  # noqa: F401
 from repro.models.moe.dense import moe_dense  # noqa: F401
 from repro.models.moe.dispatch import (  # noqa: F401
     SortPlan,
@@ -38,9 +45,11 @@ from repro.models.moe.ep import (  # noqa: F401
 from repro.models.moe.gmm import moe_gmm  # noqa: F401
 from repro.models.moe.params import init_moe  # noqa: F401
 from repro.models.moe.registry import (  # noqa: F401
+    DECODE_TOKEN_THRESHOLD,
     available_impls,
     moe,
     register_impl,
+    resolve_impl,
 )
 from repro.models.moe.router import capacity, route  # noqa: F401
 

@@ -53,6 +53,23 @@ def grouped_ffn(w1, w2, xs, plan: SortPlan, use_kernel: bool = False):
     return yt.reshape(m, d)
 
 
+def routed_ffn(w1, w2, x2d, idx, weights, use_kernel: bool = False):
+    """x2d [T, D] + routing (idx, weights) [T, k] -> combined [T, D].
+
+    The routed per-token layout: no token movement at all -- each token's k
+    expert ids drive the weight access directly, and the router-weighted
+    combine is fused with the expert SwiGLU (f32 accumulation, like
+    ``sort_combine``).  Kernel path: the fused decode kernel DMAs each
+    routed expert's weight tiles via scalar prefetch (jnp gather fallback
+    off-TPU).  jnp path: the same gather-and-contract spelled inline.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.moe_decode(x2d, w1, w2, idx, weights)
+    from repro.kernels.moe_decode import moe_decode_routed_jnp
+    return moe_decode_routed_jnp(x2d, w1, w2, idx, weights)
+
+
 def add_shared(params: Dict, cfg: ModelConfig, x2d, y):
     """Always-on shared experts (Qwen/DeepSeek) on top of the routed output."""
     if cfg.num_shared_experts:

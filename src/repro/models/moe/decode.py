@@ -1,0 +1,36 @@
+"""``decode`` impl: fused routed-expert path for decode-shaped batches.
+
+The dispatch stage vanishes: the router's top-k ids go straight to the
+compute stage, which walks only the k routed experts per token
+(``kernels/moe_decode.py`` -- on TPU each routed expert's weight tiles are
+DMA'd via scalar-prefetched ids; elsewhere a jnp gather runs the same
+math).  No sort plan, no packed ``[M, D]`` buffer, no per-expert tile
+padding -- work is O(T*k*D*F) exactly.
+
+Right regime: decode-shaped token counts (the serving decode step's
+``T = B`` single tokens; ``registry.DECODE_TOKEN_THRESHOLD`` bounds the
+auto-switch).  At prefill scale the ``gmm`` path wins instead, because
+per-expert row tiles amortize each weight fetch over many tokens while
+this path re-reads an expert's weights for every (token, slot) that routed
+to it.  Per-layer ``k`` stays a static specialization, so a LExI plan's
+layer-wise expert counts change the issued FLOPs directly (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.moe.compute import add_shared, routed_ffn
+from repro.models.moe.router import route
+
+
+def moe_decode(params: Dict, cfg: ModelConfig, x2d, top_k: int,
+               use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x2d [T, D] -> (y2d [T, D], aux_loss).  Dropless; decode-shaped T."""
+    weights, idx, aux = route(params, cfg, x2d, top_k)
+    y = routed_ffn(params["w1"], params["w2"], x2d, idx, weights, use_kernel)
+    y = add_shared(params, cfg, x2d, y.astype(x2d.dtype))
+    return y, aux

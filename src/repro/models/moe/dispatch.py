@@ -92,9 +92,27 @@ class SortPlan(NamedTuple):
     num_rows: int                    #: M = n_tiles * block_m (static)
 
 
-def default_block_m(n_copies: int, cap: int = 128) -> int:
-    """Row-tile size: MXU-friendly 128 at scale, smaller for decode shapes."""
-    return max(8, min(cap, ((n_copies + 7) // 8) * 8))
+def default_block_m(n_copies: int, cap: int = 128, floor: int = 1) -> int:
+    """Row-tile size: MXU-friendly 128 at scale, clamped to the copy count
+    (next power of two) below 8 copies.
+
+    The clamp matters for decode shapes: the packed buffer pads every
+    expert group to a multiple of ``block_m``, so a T=1, k=2 dispatch
+    under the old unconditional floor of 8 carried up to ``E*7`` padding
+    rows for 2 real ones -- mostly-empty tiles the compute stage still
+    walks.  With the clamp the worst case is ``E*(n_copies-1)`` (and the
+    fused ``decode`` impl removes the padding entirely when enabled;
+    DESIGN.md §5).  At 8+ copies the old round-to-8 sizing is kept:
+    rounding those up to a full power of two would only *grow* per-group
+    padding.  ``floor`` lets the Pallas-kernel path reimpose its Mosaic
+    sublane minimum (8) -- sub-8 row tiles only lower for the jnp path.
+    """
+    if n_copies >= 8:
+        return max(floor, min(cap, ((n_copies + 7) // 8) * 8))
+    bm = 1
+    while bm < n_copies:
+        bm *= 2
+    return max(floor, bm)
 
 
 def make_sort_plan(idx, num_experts: int, block_m: int) -> SortPlan:

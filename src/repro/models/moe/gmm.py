@@ -27,7 +27,9 @@ def moe_gmm(params: Dict, cfg: ModelConfig, x2d, top_k: int,
     """x2d [T, D] -> (y2d [T, D], aux_loss).  Dropless for any T, k."""
     t, _ = x2d.shape
     weights, idx, aux = route(params, cfg, x2d, top_k)
-    bm = block_m or default_block_m(t * top_k)
+    # kernel path keeps the Mosaic sublane floor (8); the jnp path may
+    # tile below it so decode shapes stop padding every group to 8 rows
+    bm = block_m or default_block_m(t * top_k, floor=8 if use_kernel else 1)
     plan = make_sort_plan(idx, cfg.num_experts, bm)
     xs = sort_dispatch(x2d, plan, top_k)                          # [M, D]
     ys = grouped_ffn(params["w1"], params["w2"], xs, plan, use_kernel)

@@ -8,7 +8,10 @@ has the full matrix):
                small-scale / autodiff reference.
   ``gmm``      sort-based dropless dispatch + ragged grouped matmul
                (Pallas kernel on TPU); O(T*k*D) memory; the production
-               inference path.
+               inference path at prefill scale.
+  ``decode``   fused routed-expert path (no sort plan, no packed buffer;
+               Pallas kernel on TPU); the production inference path for
+               decode-shaped batches.
   ``ep_a2a``   expert parallelism via all_to_all (train / prefill).
   ``ep_psum``  expert parallelism via psum (decode-shaped batches).
 
@@ -23,12 +26,33 @@ from __future__ import annotations
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.models.moe.decode import moe_decode
 from repro.models.moe.dense import moe_dense
 from repro.models.moe.ep import moe_ep_a2a, moe_ep_psum
 from repro.models.moe.gmm import moe_gmm
 
 #: impl name -> (pipeline fn, needs_mesh)
 _IMPLS: Dict[str, Tuple[Callable, bool]] = {}
+
+#: decode-regime auto-switch bound: ``gmm`` calls with at most this many
+#: tokens reroute to the fused ``decode`` impl when the caller opts in
+#: (``ModelOpts.use_moe_decode_kernel`` on decode steps).  T is a static
+#: (trace-time) quantity, so the switch costs nothing under jit.
+DECODE_TOKEN_THRESHOLD = 16
+
+
+def resolve_impl(impl: str, n_tokens: int, decode_kernel: bool = False) -> str:
+    """Apply the decode-regime auto-switch (DESIGN.md §5).
+
+    Only ``gmm`` reroutes: both paths are exactly dropless, so the switch
+    is a numerics-preserving specialization.  The capacity-buffer family
+    can drop tokens past capacity and must not silently change results;
+    EP impls own their collectives and stay as selected.
+    """
+    if (decode_kernel and impl == "gmm"
+            and n_tokens <= DECODE_TOKEN_THRESHOLD):
+        return "decode"
+    return impl
 
 
 def register_impl(name: str, *, needs_mesh: bool = False):
@@ -57,6 +81,13 @@ def _gmm(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
     return moe_gmm(params, cfg, x2d, top_k, use_kernel)
 
 
+@register_impl("decode")
+def _decode(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
+            a2a_chunks=1):
+    del mesh, a2a_chunks  # single-device body; GSPMD partitions under jit
+    return moe_decode(params, cfg, x2d, top_k, use_kernel)
+
+
 @register_impl("ep_a2a", needs_mesh=True)
 def _ep_a2a(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
             a2a_chunks=1):
@@ -74,15 +105,17 @@ def _ep_psum(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
 
 def moe(params: Dict, cfg: ModelConfig, x, top_k: int, *,
         impl: Optional[str] = None, mesh=None, use_kernel: bool = False,
-        a2a_chunks: int = 1):
+        a2a_chunks: int = 1, decode_kernel: bool = False):
     """x [B, S, D] -> (y [B, S, D], aux_loss scalar).
 
     ``impl`` overrides ``cfg.moe_impl``; mesh-requiring impls fall back to
     ``dense`` when no mesh is given (single-device runs of EP configs).
+    ``decode_kernel=True`` opts decode-shaped gmm calls
+    (``T <= DECODE_TOKEN_THRESHOLD``) into the fused routed-expert path.
     """
     b, s, d = x.shape
     x2d = x.reshape(b * s, d)
-    impl = impl or cfg.moe_impl
+    impl = resolve_impl(impl or cfg.moe_impl, b * s, decode_kernel)
     if impl not in _IMPLS:
         raise ValueError(f"unknown moe impl {impl!r}; have {available_impls()}")
     fn, needs_mesh = _IMPLS[impl]

@@ -51,6 +51,12 @@ class ModelOpts:
     #: the pool into a contiguous [B, n_blk*P] view first.  The gather
     #: path stays available as the equivalence oracle (default)
     use_paged_kernel: bool = False
+    #: decode-regime MoE: reroute decode-step gmm dispatch for
+    #: decode-shaped batches (T <= moe registry DECODE_TOKEN_THRESHOLD)
+    #: through the fused routed-expert path (kernels/moe_decode.py) -- no
+    #: sort plan, no packed buffer; per-layer k changes issued FLOPs.
+    #: The gmm path stays the equivalence oracle (default)
+    use_moe_decode_kernel: bool = False
 
 
 DEFAULT_OPTS = ModelOpts()

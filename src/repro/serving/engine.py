@@ -37,7 +37,8 @@ from repro.serving.kv_cache import KVCache
 from repro.serving.request import Request, Result
 from repro.serving.runner import BASE_PLAN, ModelRunner
 from repro.serving.sampling import sample_per_slot
-from repro.serving.scheduler import DECODE, DONE, PREFILL, Scheduler, Tracked
+from repro.serving.scheduler import DECODE, DONE, PREFILL, Scheduler, \
+    Tracked, duplicate_uid_error
 
 _CHUNKABLE_KINDS = ("attn_mlp", "attn_moe", "shared_attn")
 
@@ -54,6 +55,7 @@ class Engine:
                  cache_layout: Optional[str] = None,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
+                 use_moe_decode: Optional[bool] = None,
                  scheduler: str = "fifo", truncate_prompts: bool = False,
                  eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
                  mesh=None, seed: int = 0):
@@ -88,6 +90,12 @@ class Engine:
         if self.use_kernel and cache_layout != "paged":
             raise ValueError("use_kernel=True walks block tables; it needs "
                              "cache_layout='paged'")
+        # decode-regime MoE: fused routed-expert dispatch on decode steps
+        # (models/moe/decode.py); the gmm path stays the oracle when False.
+        # Layout-independent -- it switches the MoE layer impl, not the KV.
+        self.use_moe_decode = (opts.use_moe_decode_kernel
+                               if use_moe_decode is None
+                               else bool(use_moe_decode))
         # cap at the ring size: a chunk wider than the window would scatter
         # two positions into one ring slot within a single write
         self.prefill_chunk = (min(prefill_chunk or prefill_pad,
@@ -105,6 +113,7 @@ class Engine:
         self.slot_last = np.zeros(max_batch, np.int32)      # last sampled tok
         self.slot_budget = np.zeros(max_batch, np.int32)
         self.slot_temp = np.zeros(max_batch, np.float32)
+        self.slot_topk = np.zeros(max_batch, np.int32)      # 0 = no top-k cap
         self.stats: Dict[str, float] = {"prefill_tokens": 0,
                                         "decode_tokens": 0, "steps": 0}
 
@@ -173,10 +182,20 @@ class Engine:
 
         for t in self.sched.admit(can_allocate):
             self.slot_temp[t.slot] = t.req.temperature
+            # a top-k cap is meaningless at temperature 0 (greedy already
+            # takes the k=1 maximizer); recording it anyway would force
+            # the full-vocab sort path in _topks() for no output change
+            self.slot_topk[t.slot] = (t.req.top_k
+                                      if t.req.temperature > 0 else 0)
             self.slot_budget[t.slot] = t.req.max_new_tokens
             self.slot_pos[t.slot] = -1
             if not self.chunked:
                 self._whole_prefill(t)
+
+    def _topks(self):
+        """Per-slot top-k caps for sampling, or None when no slot uses one
+        (the common all-greedy case skips the full-vocab sort entirely)."""
+        return jnp.asarray(self.slot_topk) if self.slot_topk.any() else None
 
     def _first_token(self, t: Tracked, tok: int) -> None:
         """Account the prefill-sampled token; it may already terminate."""
@@ -201,6 +220,7 @@ class Engine:
         self.sched.finish(t, reason)
         self.kv.release(slot)
         self.slot_pos[slot] = -1
+        self.slot_topk[slot] = 0    # lingering caps would keep _topks() hot
 
     def _whole_prefill(self, t: Tracked) -> None:
         """Legacy [1, padded_len] prefill + slot scatter (mamba fallback)."""
@@ -220,7 +240,9 @@ class Engine:
         t.consumed = plen
         self.key, sub = jax.random.split(self.key)
         nxt = np.asarray(sample_per_slot(
-            logits, sub, jnp.asarray([t.req.temperature], jnp.float32)))
+            logits, sub, jnp.asarray([t.req.temperature], jnp.float32),
+            jnp.asarray([t.req.top_k], jnp.int32)
+            if t.req.top_k and t.req.temperature > 0 else None))
         self._first_token(t, int(nxt[0]))
 
     def _chunk_prefill_step(self, prefilling: List[Tracked]) -> None:
@@ -246,7 +268,8 @@ class Engine:
         if finishing:
             self.key, sub = jax.random.split(self.key)
             nxt = np.asarray(sample_per_slot(logits, sub,
-                                             jnp.asarray(self.slot_temp)))
+                                             jnp.asarray(self.slot_temp),
+                                             self._topks()))
             for t in finishing:
                 self._first_token(t, int(nxt[t.slot]))
 
@@ -262,10 +285,12 @@ class Engine:
         logits, self.kv.caches = self.runner.decode(
             jnp.asarray(tokens), jnp.asarray(pos), self.kv.caches,
             self.kv.block_tables(), plan=self.plan_name,
-            use_kernel=self.use_kernel, kernel_blocks=kernel_blocks)
+            use_kernel=self.use_kernel, kernel_blocks=kernel_blocks,
+            moe_decode=self.use_moe_decode)
         self.key, sub = jax.random.split(self.key)
         nxt = np.asarray(sample_per_slot(logits, sub,
-                                         jnp.asarray(self.slot_temp)))
+                                         jnp.asarray(self.slot_temp),
+                                         self._topks()))
         self.stats["steps"] += 1
         for t in decoding:
             self.slot_pos[t.slot] += 1
@@ -302,9 +327,18 @@ class Engine:
         not stick).
         """
         self.set_plan(plan if plan is not None else BASE_PLAN)
+        # refuse duplicate uids before anything is submitted: a mid-batch
+        # refusal would leave the earlier requests queued (and their uids
+        # claimed) with no way to drain them -- the scheduler-level guard
+        # stays as defense for direct submit() users
+        uids = [r.uid for r in requests]
+        if len(set(uids)) != len(uids):
+            seen = set()
+            dup = next(u for u in uids if u in seen or seen.add(u))
+            raise duplicate_uid_error(dup)
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0}
-        self.sched.finished.clear()     # records are per-workload: a
-        # long-lived engine must not accumulate every past prompt/result
+        self.sched.clear_finished()     # records (and uid claims) are
+        # per-workload: a long-lived engine must not accumulate them
         batch = [self._submit(r) for r in requests]
         t0 = time.time()
         while not self.sched.done():

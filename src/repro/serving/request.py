@@ -14,6 +14,9 @@ class Request:
     prompt: np.ndarray                  # [L] int32
     max_new_tokens: int = 16
     temperature: float = 0.0
+    #: sample only from the k highest-logit tokens (0 = no cap; ignored
+    #: when temperature is 0 -- greedy is already the k=1 maximizer)
+    top_k: int = 0
     #: streaming callback, called as ``stream(uid, token)`` per new token
     stream: Optional[Callable[[int, int], None]] = None
 

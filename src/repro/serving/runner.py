@@ -4,12 +4,14 @@ The runner owns the parameters and every jitted graph the engine steps
 through.  Graphs are cached in a specialization table keyed by
 ``(plan, kind, width, ...)``:
 
-* ``(plan, "decode", B, use_kernel, n_blocks)`` -- one-token step over all
-  B slots.  ``use_kernel`` switches paged decode between the gather oracle
-  and the block-table-native flash-decode kernel; ``n_blocks`` is the
-  kernel's static live-page walk bound (a power-of-two bucket from
-  ``KVCache.live_blocks``), so a growing context steps through at most
-  O(log n_blk) graphs while short contexts never pay full-table traffic;
+* ``(plan, "decode", B, use_kernel, n_blocks, moe_decode)`` -- one-token
+  step over all B slots.  ``use_kernel`` switches paged decode between the
+  gather oracle and the block-table-native flash-decode kernel;
+  ``n_blocks`` is the kernel's static live-page walk bound (a power-of-two
+  bucket from ``KVCache.live_blocks``), so a growing context steps through
+  at most O(log n_blk) graphs while short contexts never pay full-table
+  traffic; ``moe_decode`` routes decode-shaped MoE dispatch through the
+  fused routed-expert path instead of the sort-based gmm plan;
 * ``(plan, "chunk", C)``        -- fixed-width ``[B, C]`` chunked-prefill
   step: every prompt, whatever its length, runs through this single graph
   (no more jit-per-padded-length);
@@ -75,20 +77,26 @@ class ModelRunner:
     # ------------------------------------------------------------------ #
     def decode(self, tokens, pos, caches, block_tables=None, *,
                plan: str = BASE_PLAN, use_kernel: Optional[bool] = None,
-               kernel_blocks: Optional[int] = None):
+               kernel_blocks: Optional[int] = None,
+               moe_decode: Optional[bool] = None):
         """One decode step over all slots -> (logits [B,V], caches).
 
         ``use_kernel`` (None -> ``opts.use_paged_kernel``) selects the
         block-table-native paged flash-decode; ``kernel_blocks`` is its
-        static walk bound.  Both join the specialization key.
+        static walk bound.  ``moe_decode`` (None ->
+        ``opts.use_moe_decode_kernel``) selects the fused routed-expert
+        MoE path for the step.  All three join the specialization key.
         """
         cfg, params = self.plans[plan]
         uk = self.opts.use_paged_kernel if use_kernel is None else bool(use_kernel)
+        md = (self.opts.use_moe_decode_kernel if moe_decode is None
+              else bool(moe_decode))
         if block_tables is None:            # contiguous layout: gather-free
             uk, kernel_blocks = False, None
-        key = (plan, "decode", int(tokens.shape[0]), uk, kernel_blocks)
+        key = (plan, "decode", int(tokens.shape[0]), uk, kernel_blocks, md)
         if key not in self._jit:
-            opts = replace(self.opts, use_paged_kernel=uk)
+            opts = replace(self.opts, use_paged_kernel=uk,
+                           use_moe_decode_kernel=md)
             kb = kernel_blocks
             self._jit[key] = jax.jit(
                 lambda p, t, po, c, bt: models.decode_fn(

@@ -18,16 +18,34 @@ def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0):
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
-def sample_per_slot(logits, key, temperatures):
-    """logits [B, V], temperatures [B] -> tokens [B].
+def sample_per_slot(logits, key, temperatures, top_ks=None):
+    """logits [B, V], temperatures [B], top_ks [B] i32 (0 = no cap)
+    -> tokens [B].
 
-    Each row samples with its own temperature (greedy where it is 0) -- one
-    vectorized pass, so a single hot request cannot make its greedy
-    neighbours stochastic.
+    Each row samples with its own temperature and top-k mask (greedy where
+    temperature is 0) -- one vectorized pass, so a single hot or top-k
+    request cannot perturb its greedy neighbours: greedy rows take the
+    argmax branch and never touch the masked logits.  Per-row k varies; a
+    single ``lax.top_k`` at the *largest* live cap yields every row's
+    k-th-largest threshold in O(B*V) instead of a full-vocab sort.
+    Masking matches ``sample``: values strictly below the k-th are
+    dropped, ties with it are kept.  This is an eager host-level helper
+    (the engine calls it outside jit): the batch-max cap is read back to
+    pick the top_k width, so it cannot be traced.
     """
     temperatures = jnp.asarray(temperatures, jnp.float32)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     safe_t = jnp.where(temperatures > 0.0, temperatures, 1.0)
-    stochastic = jax.random.categorical(
-        key, logits / safe_t[:, None], axis=-1).astype(jnp.int32)
+    scaled = logits / safe_t[:, None]
+    if top_ks is not None:
+        top_ks = jnp.asarray(top_ks, jnp.int32)
+        v = logits.shape[-1]
+        max_k = int(jnp.max(jnp.minimum(top_ks, v)))
+        if max_k > 0:
+            vals, _ = jax.lax.top_k(scaled, max_k)        # [B, max_k] desc
+            kth = jnp.take_along_axis(
+                vals, jnp.clip(top_ks - 1, 0, max_k - 1)[:, None], axis=1)
+            capped = jnp.where(scaled < kth, -jnp.inf, scaled)
+            scaled = jnp.where((top_ks > 0)[:, None], capped, scaled)
+    stochastic = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
     return jnp.where(temperatures > 0.0, stochastic, greedy)

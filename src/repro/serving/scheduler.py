@@ -22,6 +22,13 @@ from repro.serving.request import Request, Result
 
 WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
 
+
+def duplicate_uid_error(uid) -> ValueError:
+    """Shared by Scheduler.submit and Engine.serve's batch pre-check."""
+    return ValueError(
+        f"duplicate request uid {uid!r}: every request in a workload needs "
+        "a unique uid (results and per-request stats are keyed by it)")
+
 #: name -> sort key over waiting requests (stable sort; ties stay FIFO)
 POLICIES: Dict[str, Callable] = {
     "fifo": lambda t: 0,
@@ -59,11 +66,20 @@ class Scheduler:
         self.waiting: List[Tracked] = []
         self.slots: List[Optional[Tracked]] = [None] * max_batch
         self.finished: List[Tracked] = []
+        self._uids: set = set()     # uids claimed by any tracked request
 
     # ------------------------------------------------------------------ #
     # Submission / admission
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> Tracked:
+        # results are keyed, sorted and stats-bucketed by uid, so a
+        # duplicate would merge two requests' records nondeterministically
+        # -- refuse it up front instead (records are per-workload: the
+        # engine calls clear_finished() at serve() entry, releasing the
+        # uid claims, so reusing uids *across* workloads stays legal)
+        if req.uid in self._uids:
+            raise duplicate_uid_error(req.uid)
+        self._uids.add(req.uid)
         t = Tracked(req=req, result=Result(uid=req.uid,
                                            prompt_len=len(req.prompt)),
                     prompt=np.asarray(req.prompt, np.int32),
@@ -139,6 +155,14 @@ class Scheduler:
 
     def done(self) -> bool:
         return not self.waiting and all(t is None for t in self.slots)
+
+    def clear_finished(self) -> None:
+        """Drop per-workload records: finished requests and their uid
+        claims (a long-lived engine must not accumulate every past
+        prompt/result, and the next workload may reuse the uids)."""
+        for t in self.finished:
+            self._uids.discard(t.req.uid)
+        self.finished.clear()
 
     # ------------------------------------------------------------------ #
     # Latency accounting

@@ -1,0 +1,252 @@
+"""Property harness for the fused decode-regime MoE path (DESIGN.md §5).
+
+Fuzzes kernels/moe_decode.py (interpret mode, so the actual kernel body
+runs on CPU CI) against an independent numpy/f64 oracle and against the
+sort-based ``gmm`` / dropless-``dense`` pipelines, across the matrix the
+serving decode step produces: batch size (incl. B=1), expert count,
+per-layer k (incl. k=E: every expert routed), shared experts on/off, and
+duplicate expert ids within a token's slots.
+
+Also pins the serving contracts:
+
+  * ``ops.moe_decode`` (the jnp fallback the engine runs off-TPU) computes
+    exactly what the kernel computes;
+  * the registry auto-switch reroutes only decode-shaped ``gmm`` calls and
+    actually invokes the ``decode`` impl from an engine decode step;
+  * an Engine with ``use_moe_decode=True`` is token-exact against the gmm
+    path under a heterogeneous LExI plan, and the runner's decode
+    specialization key records the switch.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import models
+from repro.configs import get_config
+from repro.core import iter_moe_layer_params
+from repro.kernels import ops, ref
+from repro.kernels.moe_decode import moe_decode_pallas, moe_decode_routed_jnp
+from repro.models.moe import (
+    DECODE_TOKEN_THRESHOLD,
+    available_impls,
+    moe,
+    moe_decode,
+    moe_dense,
+    moe_gmm,
+    resolve_impl,
+)
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _random_case(seed, b, e, k, d=32, f=48, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)).astype(dtype)
+    w1 = (rng.normal(size=(e, d, 2 * f)) * 0.05).astype(dtype)
+    w2 = (rng.normal(size=(e, f, d)) * 0.05).astype(dtype)
+    idx = rng.integers(0, e, size=(b, k)).astype(np.int32)
+    w = rng.random((b, k)).astype(np.float32)
+    return x, w1, w2, idx, w
+
+
+def _kernel(case, **kw):
+    return np.asarray(moe_decode_pallas(*map(jnp.asarray, case),
+                                        interpret=True, **kw))
+
+
+# --------------------------------------------------------------------------- #
+# Kernel-level properties (interpret mode: the kernel body runs on CPU)
+# --------------------------------------------------------------------------- #
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("b,e,k", [
+        (1, 8, 2),      # B=1: the single-sequence decode step
+        (8, 4, 4),      # k == E: every expert routed by every token
+        (3, 16, 1),
+        (7, 5, 3),      # nothing power-of-two
+    ])
+    def test_matches_f64_oracle(self, b, e, k):
+        case = _random_case(b * 31 + e + k, b, e, k)
+        out = _kernel(case, block_f=16)     # multi f-step accumulation
+        np.testing.assert_allclose(out, ref.moe_decode_ref(*case), **TOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 8),
+           st.integers(0, 10_000))
+    def test_property_fuzz(self, b, e, k, seed):
+        k = min(k, e)
+        case = _random_case(seed, b, e, k)
+        exp = ref.moe_decode_ref(*case)
+        np.testing.assert_allclose(_kernel(case, block_f=16), exp, **TOL)
+        np.testing.assert_allclose(
+            np.asarray(moe_decode_routed_jnp(*map(jnp.asarray, case))),
+            exp, **TOL)
+
+    def test_duplicate_expert_ids_accumulate(self):
+        """A token may route the same expert in several slots (k > 1 ties);
+        both slots' weighted contributions must sum."""
+        x, w1, w2, _, w = _random_case(3, 2, 4, 2)
+        idx = np.asarray([[1, 1], [3, 3]], np.int32)
+        case = (x, w1, w2, idx, w)
+        np.testing.assert_allclose(_kernel(case), ref.moe_decode_ref(*case),
+                                   **TOL)
+
+    def test_bf16_storage(self):
+        case = _random_case(5, 4, 6, 2, dtype=jnp.bfloat16)
+        out = _kernel(case, block_f=16).astype(np.float32)
+        exp = ref.moe_decode_ref(*case)
+        np.testing.assert_allclose(out, exp, rtol=5e-2, atol=5e-2)
+
+    def test_ops_fallback_matches_kernel(self):
+        """ops.moe_decode (the jnp path the engine runs off-TPU) and the
+        interpret-mode kernel body agree -- validating either on CI
+        validates what serves."""
+        case = _random_case(11, 6, 8, 3)
+        fallback = np.asarray(ops.moe_decode(*map(jnp.asarray, case)))
+        np.testing.assert_allclose(_kernel(case, block_f=16), fallback, **TOL)
+
+
+# --------------------------------------------------------------------------- #
+# Impl-level: decode == gmm == dropless dense through the full pipeline
+# --------------------------------------------------------------------------- #
+
+
+def _layer(e, k, *, shared=False, seed=0):
+    cfg = get_config("olmoe-1b-7b").reduced().with_(
+        num_experts=e, moe_top_k=k, dtype="float32",
+        moe_capacity_factor=float(e),   # dense dropless -> exact equivalence
+        num_shared_experts=1 if shared else 0,
+        shared_expert_d_ff=32 if shared else 0)
+    params = models.init_params(jax.random.PRNGKey(seed), cfg)
+    _, mp = next(iter_moe_layer_params(params, cfg))
+    return cfg, mp
+
+
+class TestImplEquivalence:
+    @pytest.mark.parametrize("e,k,t,shared", [
+        (8, 2, 1, False),    # B=1 decode shape
+        (8, 8, 4, False),    # k == E
+        (4, 2, 7, True),     # shared expert on top of the routed output
+        (16, 3, 8, False),
+    ])
+    def test_decode_matches_dense_and_gmm(self, e, k, t, shared):
+        cfg, mp = _layer(e, k, shared=shared)
+        x = jax.random.normal(jax.random.PRNGKey(t), (t, cfg.d_model))
+        y0, a0 = moe_dense(mp, cfg, x, k)
+        y1, _ = moe_gmm(mp, cfg, x, k)
+        y2, a2 = moe_decode(mp, cfg, x, k)
+        y3, _ = moe_decode(mp, cfg, x, k, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y2), **TOL)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), **TOL)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(y3), **TOL)
+        assert float(a0) == pytest.approx(float(a2), rel=1e-6)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(2, 16), st.integers(1, 4), st.integers(1, 16),
+           st.booleans())
+    def test_property_random_shapes(self, e, k, t, shared):
+        k = min(k, e)
+        cfg, mp = _layer(e, k, shared=shared, seed=e * 7 + k)
+        x = jax.random.normal(jax.random.PRNGKey(t), (t, cfg.d_model))
+        y0, _ = moe_gmm(mp, cfg, x, k)
+        y1, _ = moe_decode(mp, cfg, x, k)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), **TOL)
+
+
+# --------------------------------------------------------------------------- #
+# Registry auto-switch
+# --------------------------------------------------------------------------- #
+
+
+class TestAutoSwitch:
+    def test_resolve_impl_contract(self):
+        assert "decode" in available_impls()
+        at = DECODE_TOKEN_THRESHOLD
+        assert resolve_impl("gmm", at, True) == "decode"
+        assert resolve_impl("gmm", 1, True) == "decode"
+        assert resolve_impl("gmm", at + 1, True) == "gmm"   # prefill scale
+        assert resolve_impl("gmm", at, False) == "gmm"      # not opted in
+        # capacity family can drop tokens: never silently rerouted
+        assert resolve_impl("dense", 1, True) == "dense"
+        assert resolve_impl("ep_psum", 1, True) == "ep_psum"
+
+    def test_moe_entry_point_switches(self):
+        cfg, mp = _layer(8, 2)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, cfg.d_model))
+        y0, _ = moe(mp, cfg, x, 2, impl="gmm")
+        y1, _ = moe(mp, cfg, x, 2, impl="gmm", decode_kernel=True)
+        y2, _ = jax.jit(lambda p, xx: moe(p, cfg, xx, 2, impl="decode"))(mp, x)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), **TOL)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y2), **TOL)
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level: decode-MoE serving is token-exact vs the gmm path
+# --------------------------------------------------------------------------- #
+
+
+def _moe_plan_cfg():
+    cfg = get_config("olmoe-1b-7b").reduced().with_(
+        num_layers=4, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        num_experts=8, moe_top_k=4, moe_d_ff=64, vocab_size=128,
+        vocab_pad_multiple=16, dtype="float32", moe_impl="gmm")
+    # heterogeneous per-layer k: every layer compiles a distinct static
+    # specialization of the fused path
+    return cfg.with_lexi_plan((4, 2, 1, 3))
+
+
+class TestEngineTokenExact:
+    def test_decode_moe_matches_gmm_under_lexi_plan(self):
+        """use_moe_decode=True serves byte-identical tokens to the gmm
+        path under a heterogeneous LExI plan, and the decode
+        specialization key records the switch."""
+        from repro.serving import Engine, Request
+        cfg = _moe_plan_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+
+        def reqs():
+            rng = np.random.default_rng(2)
+            return [Request(uid=i,
+                            prompt=rng.integers(0, cfg.vocab_size, n
+                                                ).astype(np.int32),
+                            max_new_tokens=6)
+                    for i, n in enumerate((5, 9, 13))]
+
+        outs, engines = {}, {}
+        for md in (False, True):
+            eng = Engine(cfg, params, max_batch=3, max_len=64,
+                         prefill_chunk=4, use_moe_decode=md)
+            outs[md] = [r.tokens for r in eng.serve(reqs())]
+            engines[md] = eng
+        assert outs[True] == outs[False]
+        assert all(len(t) == 6 for t in outs[True])
+        for md, eng in engines.items():
+            dec = [k for k in eng.runner.compiled_specializations()
+                   if k[1] == "decode"]
+            assert dec and all(k[5] is md for k in dec), (md, dec)
+
+    def test_auto_switch_invokes_decode_impl(self, monkeypatch):
+        """The engine's decode step really traces through the ``decode``
+        impl (not just an equal-output gmm graph)."""
+        import repro.models.moe.registry as reg
+        from repro.serving import Engine, Request
+        calls = []
+        orig_fn, needs_mesh = reg._IMPLS["decode"]
+
+        def spy(*args, **kw):
+            calls.append(args[2].shape)      # x2d shape per invocation
+            return orig_fn(*args, **kw)
+
+        monkeypatch.setitem(reg._IMPLS, "decode", (spy, needs_mesh))
+        cfg = _moe_plan_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4,
+                     use_moe_decode=True)
+        eng.serve([Request(uid=0, prompt=np.arange(3, 8).astype(np.int32),
+                           max_new_tokens=3)])
+        # decode-shaped calls only: T == max_batch, one per MoE layer trace
+        assert calls and all(s[0] == 2 for s in calls)

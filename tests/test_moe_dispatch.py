@@ -195,6 +195,48 @@ class TestGmmKernel:
                                    np.asarray(exp, np.float32), **tol)
 
 
+class TestDecodeShapeBlockM:
+    """default_block_m clamps to the copy count (pow2) so decode-shaped
+    dispatches stop padding every expert group to mostly-empty tiles."""
+
+    def test_clamps_to_copy_count_pow2(self):
+        from repro.models.moe import default_block_m
+        assert [default_block_m(n) for n in (1, 2, 3, 6, 8, 64)] == \
+            [1, 2, 4, 8, 8, 64]
+        # 8+ copies keep the round-to-8 sizing (pow2 would grow padding)
+        assert [default_block_m(n) for n in (40, 100, 4096)] == [40, 104, 128]
+        assert default_block_m(40, cap=16) == 16
+        # the kernel path reimposes its Mosaic sublane floor
+        assert default_block_m(2, floor=8) == 8
+
+    @pytest.mark.parametrize("t", [1, 2, 8])
+    def test_sub8_tiles_run_through_kernel_in_interpret(self, t):
+        """Explicit sub-8 block_m through moe_gmm_pallas (interpret) stays
+        exact -- the small-tile layout itself is sound; only Mosaic's
+        sublane minimum keeps the default kernel path at >= 8."""
+        cfg, mp = _layer(8, 2)
+        x = jax.random.normal(jax.random.PRNGKey(t + 7), (t, cfg.d_model))
+        y0, _ = moe_dense(mp, cfg, x, 2)
+        y1, _ = moe_gmm(mp, cfg, x, 2, use_kernel=True, block_m=2)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("t", [1, 2, 8])
+    def test_kernel_matches_ref_at_decode_shapes(self, t):
+        """gmm with the clamped default tile (kernel and jnp) still equals
+        dropless dense at decode-shaped T -- tiles smaller than the old
+        floor of 8 run through moe_gmm_pallas correctly."""
+        cfg, mp = _layer(8, 2)
+        x = jax.random.normal(jax.random.PRNGKey(t), (t, cfg.d_model))
+        y0, _ = moe_dense(mp, cfg, x, 2)
+        y1, _ = moe_gmm(mp, cfg, x, 2)
+        y2, _ = moe_gmm(mp, cfg, x, 2, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y2),
+                                   rtol=2e-5, atol=2e-5)
+
+
 class TestEnginePlanRoundtrip:
     def _engine_tokens(self, cfg, params, prompt, **kw):
         from repro.serving import Engine, Request

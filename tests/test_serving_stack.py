@@ -541,3 +541,106 @@ class TestLatencyStats:
         out = eng.serve([Request(uid=0, prompt=np.arange(40, dtype=np.int32))])
         assert out[0].finished_reason == "rejected_prompt_too_long"
         assert "ttft_p50_s" not in eng.stats
+
+
+class TestPerSlotTopK:
+    """Per-request top-k sampling (Request.top_k) through the serving stack."""
+
+    def test_greedy_slot_next_to_topk_slot_byte_identical(self, setup):
+        """A top-k + temperature request must not perturb a concurrent
+        greedy request: its tokens stay byte-identical to a solo run."""
+        cfg, params = setup
+        rng = np.random.default_rng(4)
+        p_greedy = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        p_hot = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+
+        solo = Engine(cfg, params, max_batch=1, max_len=64, prefill_chunk=4)
+        ref_toks = solo.serve([Request(uid=0, prompt=p_greedy,
+                                       max_new_tokens=6)])[0].tokens
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        out = eng.serve([
+            Request(uid=0, prompt=p_greedy, max_new_tokens=6),
+            Request(uid=1, prompt=p_hot, max_new_tokens=6,
+                    temperature=1.0, top_k=5),
+        ])
+        assert out[0].tokens == ref_toks
+        assert len(out[1].tokens) == 6
+
+    def test_top_k_one_equals_greedy(self, setup):
+        """top_k=1 with temperature > 0 leaves only the argmax unmasked, so
+        the request decodes exactly the greedy sequence -- a deterministic
+        end-to-end pin of the masking through both the prefill first-token
+        and decode sampling paths."""
+        cfg, params = setup
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+        eng = Engine(cfg, params, max_batch=1, max_len=64, prefill_chunk=4)
+        greedy = eng.serve([Request(uid=0, prompt=prompt,
+                                    max_new_tokens=6)])[0].tokens
+        capped = eng.serve([Request(uid=0, prompt=prompt, max_new_tokens=6,
+                                    temperature=1.0, top_k=1)])[0].tokens
+        assert capped == greedy
+
+    def test_whole_prompt_prefill_path_applies_top_k(self, setup):
+        """The legacy whole-prompt prefill samples the first token with the
+        request's top_k too (prefill_chunk=0 fallback path)."""
+        cfg, params = setup
+        rng = np.random.default_rng(6)
+        prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+        kw = dict(max_batch=1, max_len=64, prefill_pad=8, prefill_chunk=0,
+                  cache_layout="contiguous")
+        greedy = Engine(cfg, params, **kw).serve(
+            [Request(uid=0, prompt=prompt, max_new_tokens=4)])[0].tokens
+        capped = Engine(cfg, params, **kw).serve(
+            [Request(uid=0, prompt=prompt, max_new_tokens=4,
+                     temperature=1.0, top_k=1)])[0].tokens
+        assert capped == greedy
+
+
+class TestDuplicateUids:
+    """Results are keyed and sorted by uid; duplicates must be refused."""
+
+    def test_duplicate_uid_in_one_workload_rejected(self, setup):
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        reqs = [Request(uid=7, prompt=np.arange(4, dtype=np.int32)),
+                Request(uid=7, prompt=np.arange(5, dtype=np.int32))]
+        with pytest.raises(ValueError, match="duplicate request uid"):
+            eng.serve(reqs)
+
+    def test_duplicate_of_finished_request_rejected(self):
+        """Within one workload, reusing the uid of an already-finished
+        request is still a collision (results() would merge them)."""
+        s = Scheduler(max_batch=1)
+        t = s.submit(Request(uid=3, prompt=np.zeros(2, np.int32)))
+        s.admit(lambda slot, tr: True)
+        s.record_token(t, 1)
+        s.finish(t, "length")
+        with pytest.raises(ValueError, match="duplicate request uid"):
+            s.submit(Request(uid=3, prompt=np.zeros(2, np.int32)))
+
+    def test_uid_reuse_across_serves_allowed(self, setup):
+        """serve() records are per-workload: the same uids may be submitted
+        again in the next serve (the bench warmup pattern)."""
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        for _ in range(2):
+            out = eng.serve(mixed_requests(cfg.vocab_size, lens=(5, 9),
+                                           max_new=3))
+            assert [r.uid for r in out] == [0, 1]
+
+    def test_engine_usable_after_duplicate_rejection(self, setup):
+        """A refused workload must not leave requests queued or uids
+        claimed: the corrected workload serves normally."""
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        reqs = [Request(uid=7, prompt=np.arange(4, dtype=np.int32),
+                        max_new_tokens=3),
+                Request(uid=7, prompt=np.arange(5, dtype=np.int32),
+                        max_new_tokens=3)]
+        with pytest.raises(ValueError, match="duplicate request uid"):
+            eng.serve(reqs)
+        assert eng.sched.done()                      # nothing left queued
+        out = eng.serve([Request(uid=7, prompt=np.arange(4, dtype=np.int32),
+                                 max_new_tokens=3)])
+        assert [r.uid for r in out] == [7] and len(out[0].tokens) == 3
