@@ -20,6 +20,13 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV pool size in pages; a constrained pool admits "
+                         "on demand and preempts under pressure")
+    ap.add_argument("--preemption", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="on-demand paging + preempt-and-recompute (default "
+                         "on); --no-preemption reserves whole lifetimes")
     args = ap.parse_args()
 
     # -- train a small MoE so routing has real structure ------------------- #
@@ -43,7 +50,8 @@ def main():
                 for i in range(args.requests)]
 
     # -- ONE engine, one set of weights, two specializations ---------------- #
-    eng = Engine(cfg, params, max_batch=4, max_len=128, prefill_pad=16)
+    eng = Engine(cfg, params, max_batch=4, max_len=128, prefill_pad=16,
+                 num_pages=args.num_pages, preemption=args.preemption)
     eng.serve(reqs())
     base_tput = eng.throughput()
     base_ppl = eval_perplexity(params, cfg, dc, steps=4)

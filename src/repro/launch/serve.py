@@ -38,9 +38,11 @@ def synth_requests(n: int, vocab: int, *, lo: int = 8, hi: int = 48,
 def _report(tag: str, eng: Engine) -> float:
     tput = eng.throughput()
     s = eng.stats
+    pre = (f"preempt={s['preemptions']} recompute={s['recompute_tokens']} "
+           if s.get("preemptions") else "")
     print(f"{tag}: {tput:,.1f} tok/s  "
           f"(prefill={s['prefill_tokens']} decode={s['decode_tokens']} "
-          f"steps={s['steps']} "
+          f"steps={s['steps']} {pre}"
           f"ttft_p50={s.get('ttft_p50_s', float('nan')) * 1e3:.0f}ms "
           f"ttft_p95={s.get('ttft_p95_s', float('nan')) * 1e3:.0f}ms "
           f"decode_tps_p50={s.get('decode_tps_p50', float('nan')):.1f})")
@@ -58,6 +60,16 @@ def main() -> int:
     ap.add_argument("--prefill-chunk", type=int, default=None)
     ap.add_argument("--cache-layout", choices=["paged", "contiguous"],
                     default=None)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV pool size in pages (default: worst-case "
+                         "max_batch x max_len; smaller pools admit on "
+                         "demand and preempt under pressure)")
+    ap.add_argument("--preemption", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="on-demand page allocation + preempt-and-recompute "
+                         "(default: on for the paged layout); "
+                         "--no-preemption reserves prompt+max_new pages for "
+                         "a request's whole lifetime at admission")
     ap.add_argument("--use-kernel", action="store_true",
                     help="paged decode attends pages in-kernel (block-table-"
                          "native flash-decode) instead of gathering")
@@ -90,6 +102,8 @@ def main() -> int:
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
                  prefill_chunk=args.prefill_chunk,
                  cache_layout=args.cache_layout,
+                 num_pages=args.num_pages,
+                 preemption=args.preemption,
                  use_kernel=args.use_kernel or None,
                  use_moe_decode=args.use_moe_decode or None,
                  scheduler=args.scheduler)

@@ -15,6 +15,14 @@ live slots at once.  Stacks with mamba blocks (no position dim to page or
 chunk) transparently fall back to the contiguous layout with per-request
 whole-prompt prefill.
 
+Under the default on-demand reservation discipline (DESIGN.md §6)
+admission takes only the prompt's pages, decode grows a slot page by page
+as it crosses page boundaries, and a dry pool preempts the last-admitted
+live request: its pages are released and it re-queues PREEMPTED, to be
+re-prefilled (prompt + generated-so-far) and resumed token-exactly when
+pages free up.  ``preemption=False`` restores whole-lifetime reservation
+(admission takes prompt + max_new up front; nothing is ever evicted).
+
 ``Engine(cfg, params).serve(reqs)`` is unchanged from the monolith it
 replaced; ``serve(reqs, plan="name")`` after ``add_plan`` serves a LExI
 plan from the same runner and weights.
@@ -56,6 +64,7 @@ class Engine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
                  use_moe_decode: Optional[bool] = None,
+                 preemption: Optional[bool] = None,
                  scheduler: str = "fifo", truncate_prompts: bool = False,
                  eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
                  mesh=None, seed: int = 0):
@@ -96,6 +105,16 @@ class Engine:
         self.use_moe_decode = (opts.use_moe_decode_kernel
                                if use_moe_decode is None
                                else bool(use_moe_decode))
+        # on-demand page reservation + preemption (None -> on for paged).
+        # preemption=False is the whole-lifetime-reservation baseline: an
+        # admitted request can always complete, but a single long-max_new
+        # request blocks pool capacity it may never use.
+        if preemption is None:
+            preemption = cache_layout == "paged"
+        if preemption and cache_layout != "paged":
+            raise ValueError("preemption manages the paged pool; it needs "
+                             "cache_layout='paged'")
+        self.ondemand = bool(preemption)
         # cap at the ring size: a chunk wider than the window would scatter
         # two positions into one ring slot within a single write
         self.prefill_chunk = (min(prefill_chunk or prefill_pad,
@@ -114,8 +133,16 @@ class Engine:
         self.slot_budget = np.zeros(max_batch, np.int32)
         self.slot_temp = np.zeros(max_batch, np.float32)
         self.slot_topk = np.zeros(max_batch, np.int32)      # 0 = no top-k cap
-        self.stats: Dict[str, float] = {"prefill_tokens": 0,
-                                        "decode_tokens": 0, "steps": 0}
+        self.stats: Dict[str, float] = self._fresh_stats()
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, float]:
+        # prefill_tokens counts each prompt position once (useful work);
+        # positions re-prefilled when a preempted request resumes land in
+        # recompute_tokens instead, so throughput() reflects useful tokens
+        return {"prefill_tokens": 0, "decode_tokens": 0,
+                "recompute_tokens": 0, "steps": 0, "preemptions": 0,
+                "live_peak": 0}
 
     # ------------------------------------------------------------------ #
     # Plans
@@ -178,7 +205,23 @@ class Engine:
     # ------------------------------------------------------------------ #
     def _admit(self) -> None:
         def can_allocate(slot: int, t: Tracked) -> bool:
-            return self.kv.allocate(slot, t.prompt_len + t.req.max_new_tokens)
+            if self.ondemand:
+                # reserve only what this admission's prefill will write:
+                # the prompt, plus generated-so-far minus the pending
+                # token on resume.  Decode growth is allocate_append's
+                # job.  Headroom gate (anti-thrash): admitting must leave
+                # one free page per already-decoding slot -- each may
+                # cross a page boundary within page_size steps, and
+                # admitting into their growth budget just preempts the
+                # newcomer right back out (admit -> evict -> recompute
+                # churn that burns prefill work without finishing anyone).
+                n = t.prompt_len + max(len(t.result.tokens) - 1, 0)
+                headroom = len(self.sched.in_state(DECODE))
+                if self.kv.free_pages() < self.kv.pages_needed(n) + headroom:
+                    return False
+            else:
+                n = t.prompt_len + t.req.max_new_tokens
+            return self.kv.allocate(slot, n)
 
         for t in self.sched.admit(can_allocate):
             self.slot_temp[t.slot] = t.req.temperature
@@ -187,7 +230,13 @@ class Engine:
             # the full-vocab sort path in _topks() for no output change
             self.slot_topk[t.slot] = (t.req.top_k
                                       if t.req.temperature > 0 else 0)
-            self.slot_budget[t.slot] = t.req.max_new_tokens
+            gen = t.result.tokens
+            if gen:     # resume: re-prefill prompt + all but the pending tok
+                t.fill = np.concatenate(
+                    [t.prompt, np.asarray(gen[:-1], np.int32)])
+            else:
+                t.fill = t.prompt
+            self.slot_budget[t.slot] = t.req.max_new_tokens - len(gen)
             self.slot_pos[t.slot] = -1
             if not self.chunked:
                 self._whole_prefill(t)
@@ -246,34 +295,96 @@ class Engine:
         self._first_token(t, int(nxt[0]))
 
     def _chunk_prefill_step(self, prefilling: List[Tracked]) -> None:
-        """Advance every prefilling slot by one fixed-width chunk."""
+        """Advance every prefilling slot by one fixed-width chunk.
+
+        Fresh and resuming (post-preemption) requests ride the same
+        ``(plan, "chunk", C)`` graph -- resume is not a new graph family.
+        A resuming slot's chunks count as recompute, and finishing its
+        fill transitions straight to DECODE with the token sampled before
+        eviction: no re-sampling, no re-fired streaming callbacks.
+        """
         c = self.prefill_chunk
         tokens = np.zeros((self.max_batch, c), np.int32)
         positions = np.full((self.max_batch, c), -1, np.int32)
         last_idx = np.zeros(self.max_batch, np.int32)
-        finishing: List[Tracked] = []
+        sampling: List[Tracked] = []
         for t in prefilling:
-            n = min(c, t.prompt_len - t.consumed)
-            tokens[t.slot, :n] = t.prompt[t.consumed:t.consumed + n]
+            n = min(c, t.fill_len - t.consumed)
+            tokens[t.slot, :n] = t.fill[t.consumed:t.consumed + n]
             positions[t.slot, :n] = np.arange(t.consumed, t.consumed + n)
             t.consumed += n
-            self.stats["prefill_tokens"] += n
-            if t.consumed == t.prompt_len:
-                last_idx[t.slot] = n - 1
-                finishing.append(t)
+            if t.resuming:
+                self.stats["recompute_tokens"] += n
+                t.result.recompute_tokens += n
+            else:
+                # a victim evicted mid-prefill re-runs positions already
+                # charged as useful work: only the advance past its
+                # prefill high-water mark counts as fresh
+                fresh = min(n, max(0, t.consumed - t.prefill_done))
+                self.stats["prefill_tokens"] += fresh
+                self.stats["recompute_tokens"] += n - fresh
+                t.result.recompute_tokens += n - fresh
+                t.prefill_done = max(t.prefill_done, t.consumed)
+            if t.consumed == t.fill_len:
+                if t.resuming:
+                    t.state = DECODE
+                    self.slot_pos[t.slot] = t.fill_len
+                    self.slot_last[t.slot] = t.result.tokens[-1]
+                else:
+                    last_idx[t.slot] = n - 1
+                    sampling.append(t)
         logits, self.kv.caches = self.runner.chunk_prefill(
             jnp.asarray(tokens), jnp.asarray(positions),
             jnp.asarray(last_idx), self.kv.caches, self.kv.block_tables(),
             plan=self.plan_name)
-        if finishing:
+        if sampling:
             self.key, sub = jax.random.split(self.key)
             nxt = np.asarray(sample_per_slot(logits, sub,
                                              jnp.asarray(self.slot_temp),
                                              self._topks()))
-            for t in finishing:
+            for t in sampling:
                 self._first_token(t, int(nxt[t.slot]))
 
+    def _preempt(self, t: Tracked) -> None:
+        """Evict a live request: pages back to the pool, request re-queued
+        PREEMPTED (its generated tokens are kept for the resume prefill)."""
+        slot = t.slot
+        self.sched.preempt(t)
+        self.kv.release(slot)
+        self.slot_pos[slot] = -1
+        self.slot_budget[slot] = 0
+        self.slot_temp[slot] = 0.0
+        self.slot_topk[slot] = 0
+        self.stats["preemptions"] += 1
+
+    def _grow_or_preempt(self, decoding: List[Tracked]) -> List[Tracked]:
+        """On-demand allocation before the decode write: every decoding
+        slot gets the page its next position needs; a pool shortfall
+        preempts victims last-admitted-first until the allocation fits.
+
+        Growing earliest-admitted-first while evicting latest-first means
+        a victim is never a slot already grown this step, and the earliest
+        live request is never evicted by a later one -- with ``fits_ever``
+        guaranteeing any single admitted request fits the whole pool, that
+        request always completes, so repeated preemption cannot livelock.
+        """
+        for t in sorted(decoding, key=lambda t: t.admit_seq):
+            if t.state != DECODE:           # evicted as a victim below
+                continue
+            while not self.kv.allocate_append(t.slot,
+                                              int(self.slot_pos[t.slot]) + 1):
+                live = [v for v in self.sched.slots if v is not None]
+                victim = max(live, key=lambda v: v.admit_seq)
+                self._preempt(victim)
+                if victim is t:
+                    break
+        return self.sched.in_state(DECODE)
+
     def _decode_step(self, decoding: List[Tracked]) -> None:
+        if self.ondemand:
+            decoding = self._grow_or_preempt(decoding)
+            if not decoding:
+                return
         tokens = np.zeros(self.max_batch, np.int32)
         pos = np.full(self.max_batch, -1, np.int32)
         for t in decoding:
@@ -305,8 +416,19 @@ class Engine:
             if done_eos or done_len:
                 self._finish(t, "eos" if done_eos else "length")
 
+    def _abort(self, reason: str) -> None:
+        """Drain every live and queued request so a failed serve() cannot
+        wedge the engine: pages go back to the pool, slots clear, and the
+        finished records release their uid claims at the next serve()."""
+        for t in [x for x in self.sched.slots if x is not None]:
+            self._finish(t, reason)
+        for t in list(self.sched.waiting):
+            self.sched.reject(t, reason)
+
     def _step(self) -> None:
         self._admit()
+        live = sum(t is not None for t in self.sched.slots)
+        self.stats["live_peak"] = max(self.stats["live_peak"], live)
         prefilling = self.sched.in_state(PREFILL)
         if prefilling:
             self._chunk_prefill_step(prefilling)
@@ -318,13 +440,15 @@ class Engine:
     # Public API
     # ------------------------------------------------------------------ #
     def serve(self, requests: Sequence[Request], *,
-              plan: Optional[str] = None) -> List[Result]:
+              plan: Optional[str] = None,
+              max_steps: Optional[int] = None) -> List[Result]:
         """Run a full workload with continuous batching; returns all results.
 
         Throughput counters and latency percentiles are per-serve (reset at
         entry).  ``plan=`` selects a registered LExI specialization;
         omitting it serves the base config (a previous serve's plan does
-        not stick).
+        not stick).  ``max_steps`` bounds the engine-step loop (a livelock
+        guard for stress harnesses): exceeding it raises RuntimeError.
         """
         self.set_plan(plan if plan is not None else BASE_PLAN)
         # refuse duplicate uids before anything is submitted: a mid-batch
@@ -336,19 +460,32 @@ class Engine:
             seen = set()
             dup = next(u for u in uids if u in seen or seen.add(u))
             raise duplicate_uid_error(dup)
-        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0}
+        self.stats = self._fresh_stats()
         self.sched.clear_finished()     # records (and uid claims) are
         # per-workload: a long-lived engine must not accumulate them
         batch = [self._submit(r) for r in requests]
         t0 = time.time()
+        n_steps = 0
         while not self.sched.done():
+            if max_steps is not None and n_steps >= max_steps:
+                queued, live = (len(self.sched.waiting),
+                                sum(t is not None for t in self.sched.slots))
+                self._abort("aborted_max_steps")    # engine stays reusable
+                raise RuntimeError(
+                    f"serve() exceeded max_steps={max_steps}: "
+                    f"{queued} queued, {live} live "
+                    f"({self.stats['preemptions']} preemptions so far)")
             self._step()
+            n_steps += 1
         self.stats["wall_s"] = time.time() - t0
         self.stats.update(self.sched.percentiles(batch))
         return sorted((t.result for t in batch), key=lambda r: r.uid)
 
     def throughput(self) -> float:
-        """Tokens (prompt + generated) per second over the last serve()."""
+        """Useful tokens (prompt + generated) per second over the last
+        serve().  Positions re-prefilled by preemption recovery are
+        accounted separately (``stats["recompute_tokens"]``) -- recompute
+        is overhead, not throughput."""
         wall = self.stats.get("wall_s", 0.0)
         tok = self.stats["prefill_tokens"] + self.stats["decode_tokens"]
         return tok / wall if wall > 0 else float("nan")

@@ -15,9 +15,14 @@ accounting (DESIGN.md §3).  Two layouts behind one interface:
     The classic per-slot-row cache -- kept as the token-exact equivalence
     oracle and as the only layout mamba state supports (no position dim).
 
-Admission reserves a request's full worst-case page need up front
-(prompt + max_new tokens), so an admitted request can always run to
-completion -- preemption is a later PR's problem.
+Two reservation disciplines sit on top (DESIGN.md §6).  The engine's
+legacy ``preemption=False`` mode reserves a request's full worst-case page
+need up front (prompt + max_new tokens) via ``allocate``, so an admitted
+request always runs to completion.  The default on-demand mode reserves
+only what admission actually writes (the prompt) and grows a slot page by
+page through ``allocate_append`` as decode crosses page boundaries; when
+the pool runs dry the *engine* preempts a victim and ``release`` returns
+its pages -- the manager itself stays policy-free.
 """
 
 from __future__ import annotations
@@ -52,7 +57,8 @@ class KVCache:
         self.max_batch = max_batch
         self.max_len = max_len
         self.s_buf = cache_buf_len(cfg, max_len)
-        self.stats = {"pages_in_use": 0, "pages_peak": 0}
+        self.stats = {"pages_in_use": 0, "pages_peak": 0,
+                      "free_low_watermark": 1 << 30}
         if layout == "paged":
             self.page_size = page_size
             self.blocks_per_slot = -(-self.s_buf // page_size)
@@ -69,6 +75,7 @@ class KVCache:
                                  TRASH_PAGE, np.int32)
             self._owned: List[List[int]] = [[] for _ in range(max_batch)]
             self._table_dev = None      # device copy, refreshed lazily
+            self.stats["free_low_watermark"] = len(self._free)
         else:
             self.caches = models.init_caches(cfg, max_batch, max_len)
 
@@ -114,8 +121,12 @@ class KVCache:
     # Slot lifecycle
     # ------------------------------------------------------------------ #
     def allocate(self, slot: int, total_tokens: int) -> bool:
-        """Reserve pages for a request's whole lifetime; False if pool full.
+        """Reserve pages covering positions [0, total_tokens); False if the
+        pool cannot.
 
+        Under whole-lifetime reservation this is called once with
+        prompt + max_new; under on-demand admission it reserves only what
+        prefill will write and ``allocate_append`` grows the slot later.
         A failed reservation (including one that runs out of free pages
         midway) rolls back every page already taken, so the pool is left
         exactly as found -- the invariant is structural, not dependent on
@@ -125,19 +136,44 @@ class KVCache:
             self._clear_contiguous_slot(slot)
             return True
         assert not self._owned[slot], f"slot {slot} already allocated"
-        need = self.pages_needed(total_tokens)
+        return self._take(slot, self.pages_needed(total_tokens))
+
+    def allocate_append(self, slot: int, total_tokens: int) -> bool:
+        """Grow an allocated slot to cover positions [0, total_tokens).
+
+        The on-demand decode path calls this before every step; it is a
+        no-op (True) until the sequence crosses a page boundary, then takes
+        exactly the missing pages.  A mid-allocation shortfall rolls back
+        the pages already appended -- the slot keeps its previous coverage
+        and the pool is left exactly as found, so the engine can preempt a
+        victim and retry.  Ring semantics cap growth at one full buffer
+        (a wrapped sequence rewrites its own pages; see pages_needed).
+        """
+        if self.layout != "paged":
+            return True
+        assert self._owned[slot], f"slot {slot} has no allocation to grow"
+        return self._take(slot, self.pages_needed(total_tokens)
+                          - len(self._owned[slot]))
+
+    def _take(self, slot: int, need: int) -> bool:
+        """Append ``need`` free pages to ``slot`` (all or nothing)."""
+        if need <= 0:
+            return True
         pages: List[int] = []
         for _ in range(need):
             if not self._free:
                 self._free.extend(reversed(pages))      # roll back, no leak
                 return False
             pages.append(self._free.pop())
-        self._owned[slot] = pages
-        self.table[slot, :need] = pages
+        have = len(self._owned[slot])
+        self._owned[slot].extend(pages)
+        self.table[slot, have:have + need] = pages
         self._table_dev = None
         self.stats["pages_in_use"] += need
         self.stats["pages_peak"] = max(self.stats["pages_peak"],
                                        self.stats["pages_in_use"])
+        self.stats["free_low_watermark"] = min(
+            self.stats["free_low_watermark"], len(self._free))
         return True
 
     def release(self, slot: int) -> None:

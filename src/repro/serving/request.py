@@ -28,5 +28,8 @@ class Result:
     prompt_len: int = 0
     finished_reason: str = ""
     truncated: bool = False             # prompt was cut to fit max_len
-    ttft_s: float = 0.0                 # time to first token
+    ttft_s: float = 0.0                 # submission -> first token
+    queue_delay_s: float = 0.0          # submission -> *first* admission
     decode_tps: float = 0.0             # decode tokens/s (after first token)
+    preemptions: int = 0                # times evicted under pool pressure
+    recompute_tokens: int = 0           # positions re-prefilled on resume

@@ -14,7 +14,9 @@ through.  Graphs are cached in a specialization table keyed by
   fused routed-expert path instead of the sort-based gmm plan;
 * ``(plan, "chunk", C)``        -- fixed-width ``[B, C]`` chunked-prefill
   step: every prompt, whatever its length, runs through this single graph
-  (no more jit-per-padded-length);
+  (no more jit-per-padded-length).  Preemption resume rides this same
+  graph -- re-prefilling a victim's prompt + generated-so-far is just a
+  longer fill, so recompute adds no new graph family;
 * ``(plan, "prefill", L)``      -- legacy whole-prompt ``[1, L]`` graph for
   stacks chunked prefill cannot serve (mamba state carry).
 

@@ -8,6 +8,17 @@ request queued behind it), tracks each request through
 WAITING -> PREFILL -> DECODE -> DONE, fires streaming callbacks, and
 accumulates per-request latency records (time-to-first-token, decode
 tokens/s) that ``percentiles()`` turns into the p50/p95 the engine reports.
+
+Preemption (DESIGN.md §6): when the engine's KV pool runs dry it evicts a
+victim through ``preempt``, which re-queues the request in a PREEMPTED
+state.  Preempted requests out-rank every fresh WAITING candidate at the
+next ``admit`` (their recompute cost grows with every token generated
+while they sit in the queue).  Re-admission reassigns only ``admit_seq``
+(the ordinal the engine's last-admitted-first victim policy sorts by):
+``t_admit`` keeps the *first* admission, so ``Result.queue_delay_s``
+reports real submission-to-admission queueing, and TTFT -- measured from
+submission to first token -- is likewise unaffected by eviction (tokens
+already streamed are never re-recorded).
 """
 
 from __future__ import annotations
@@ -21,6 +32,7 @@ import numpy as np
 from repro.serving.request import Request, Result
 
 WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
+PREEMPTED = "preempted"     # evicted from its slot, queued for re-admission
 
 
 def duplicate_uid_error(uid) -> ValueError:
@@ -46,15 +58,36 @@ class Tracked:
     prompt: Optional[np.ndarray] = None
     state: str = WAITING
     slot: int = -1
-    consumed: int = 0          # prompt tokens already prefilled
+    consumed: int = 0          # prefill-source tokens already prefilled
+    #: positions ever charged as *useful* prefill work: a victim evicted
+    #: mid-prefill re-prefills [0, prefill_done) as recompute, not fresh
+    prefill_done: int = 0
+    #: tokens to (re-)prefill this admission -- the prompt, or on resume
+    #: the prompt + generated-so-far minus the pending last token
+    fill: Optional[np.ndarray] = None
+    #: admission ordinal (reassigned on re-admission); the engine preempts
+    #: the live request with the highest admit_seq first
+    admit_seq: int = -1
     t_submit: float = 0.0
-    t_admit: float = 0.0
+    t_admit: float = 0.0       # first admission (preserved on resume)
     t_first: float = 0.0       # first sampled token
     t_done: float = 0.0
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
+
+    @property
+    def fill_len(self) -> int:
+        return len(self.fill if self.fill is not None else self.prompt)
+
+    @property
+    def resuming(self) -> bool:
+        """Re-admitted after preemption with tokens already generated: the
+        whole prefill is recompute, and finishing it must not sample a
+        first token (the next token was sampled before eviction) or
+        re-fire streaming callbacks."""
+        return self.state == PREFILL and bool(self.result.tokens)
 
 
 class Scheduler:
@@ -67,6 +100,7 @@ class Scheduler:
         self.slots: List[Optional[Tracked]] = [None] * max_batch
         self.finished: List[Tracked] = []
         self._uids: set = set()     # uids claimed by any tracked request
+        self._admit_counter: int = 0    # admission ordinal source
 
     # ------------------------------------------------------------------ #
     # Submission / admission
@@ -88,12 +122,19 @@ class Scheduler:
         return t
 
     def reject(self, t: Tracked, reason: str) -> None:
-        """Refuse a request before it touches a slot (e.g. over-long prompt)."""
+        """Retire a request that holds no slot: a refusal before admission
+        (e.g. over-long prompt) or an abort of a queued PREEMPTED request.
+        Latency fields earned in a previous residency (first admission,
+        streamed tokens) are kept, consistent with ``finish``."""
         if t in self.waiting:
             self.waiting.remove(t)
         t.state = DONE
         t.t_done = time.time()
         t.result.finished_reason = reason
+        if t.t_admit > 0.0:
+            t.result.queue_delay_s = t.t_admit - t.t_submit
+        if t.result.tokens:
+            t.result.ttft_s = t.t_first - t.t_submit
         self.finished.append(t)
 
     def free_slots(self) -> List[int]:
@@ -108,8 +149,15 @@ class Scheduler:
         candidate may still fit (best-effort packing -- a request the pool
         cannot hold right now is retried every step and admitted as pages
         drain; batch workloads cannot starve it indefinitely).
+
+        PREEMPTED requests out-rank fresh WAITING ones under either policy
+        (ties stay stable, i.e. preemption order): every step they spend
+        queued grows their recompute bill, while a fresh request's cost of
+        waiting is just waiting.
         """
-        order = sorted(self.waiting, key=POLICIES[self.policy])
+        order = sorted(self.waiting,
+                       key=lambda t: (t.state != PREEMPTED,
+                                      POLICIES[self.policy](t)))
         admitted: List[Tracked] = []
         for t in order:
             free = self.free_slots()
@@ -119,10 +167,28 @@ class Scheduler:
             if not can_allocate(slot, t):
                 continue
             self.waiting.remove(t)
-            t.state, t.slot, t.t_admit = PREFILL, slot, time.time()
+            t.state, t.slot = PREFILL, slot
+            if t.t_admit == 0.0:        # queue_delay_s: first admission only
+                t.t_admit = time.time()
+            t.admit_seq = self._admit_counter
+            self._admit_counter += 1
             self.slots[slot] = t
             admitted.append(t)
         return admitted
+
+    def preempt(self, t: Tracked) -> None:
+        """Evict a live request from its slot and re-queue it for
+        re-admission (the engine releases the KV pages and re-prefills
+        prompt + generated-so-far on resume).  Lifecycle only -- victim
+        *selection* is the engine's policy.
+        """
+        assert t.state in (PREFILL, DECODE), \
+            f"cannot preempt a {t.state} request"
+        if 0 <= t.slot < self.max_batch:
+            self.slots[t.slot] = None
+        t.state, t.slot, t.consumed, t.fill = PREEMPTED, -1, 0, None
+        t.result.preemptions += 1
+        self.waiting.append(t)
 
     # ------------------------------------------------------------------ #
     # Step composition
@@ -144,6 +210,8 @@ class Scheduler:
         t.state = DONE
         t.t_done = time.time()
         t.result.finished_reason = reason
+        if t.t_admit > 0.0:
+            t.result.queue_delay_s = t.t_admit - t.t_submit
         if t.result.tokens:
             t.result.ttft_s = t.t_first - t.t_submit
             if len(t.result.tokens) > 1:

@@ -597,6 +597,233 @@ class TestPerSlotTopK:
         assert capped == greedy
 
 
+class TestPreemption:
+    """On-demand reservation + preempt-and-recompute (DESIGN.md §6).
+
+    The deterministic scenario: two requests of 4 prompt + 12 new tokens
+    on a 4-page pool of 4-position pages.  Both admit on prompt pages;
+    on-demand growth exhausts the pool mid-decode and evicts the
+    last-admitted request, which must resume token-exactly."""
+
+    def _serve_tight(self, cfg, params, *, streams=None, **kw):
+        ekw = dict(max_batch=2, max_len=64, prefill_chunk=4,
+                   cache_layout="paged", page_size=4)
+        ekw.update(kw)
+        eng = Engine(cfg, params, **ekw)
+        reqs = []
+        for i in range(2):
+            stream = None
+            if streams is not None:
+                streams[i] = []
+                stream = (lambda uid, tok, s=streams: s[uid].append(tok))
+            reqs.append(Request(uid=i,
+                                prompt=np.arange(4, dtype=np.int32) + i,
+                                max_new_tokens=12, stream=stream))
+        return eng, eng.serve(reqs, max_steps=400)
+
+    def test_preempted_request_resumes_token_exact(self, setup):
+        cfg, params = setup
+        _, ref = self._serve_tight(cfg, params)             # ample pool
+        eng, out = self._serve_tight(cfg, params, num_pages=4)
+        assert eng.stats["preemptions"] >= 1                # pressure was real
+        assert [r.tokens for r in out] == [r.tokens for r in ref]
+        assert [r.finished_reason for r in out] == \
+            [r.finished_reason for r in ref]
+
+    def test_streaming_sequence_survives_preemption(self, setup):
+        """A preempted request's callback sequence equals the
+        no-preemption sequence: recompute must not re-emit tokens."""
+        cfg, params = setup
+        ref_streams: dict = {}
+        self._serve_tight(cfg, params, streams=ref_streams)
+        streams: dict = {}
+        eng, out = self._serve_tight(cfg, params, streams=streams,
+                                     num_pages=4)
+        assert eng.stats["preemptions"] >= 1
+        assert streams == ref_streams
+        for r in out:
+            assert streams[r.uid] == r.tokens
+
+    def test_pages_accounting_under_preemption(self, setup):
+        """pages_peak never exceeds the pool, recycled pages return, and
+        the per-request preemption/recompute counters land in results."""
+        cfg, params = setup
+        eng, out = self._serve_tight(cfg, params, num_pages=4)
+        assert eng.kv.stats["pages_peak"] <= 4
+        assert eng.kv.stats["pages_in_use"] == 0
+        assert eng.kv.free_pages() == 4
+        assert eng.kv.stats["free_low_watermark"] == 0      # pool ran dry
+        assert sum(r.preemptions for r in out) == eng.stats["preemptions"]
+        assert sum(r.recompute_tokens for r in out) == \
+            eng.stats["recompute_tokens"] > 0
+
+    def test_prefill_recompute_split(self, setup):
+        """Recompute work must not inflate prefill_tokens (or
+        throughput()): useful prefill counts each prompt position once."""
+        cfg, params = setup
+        eng, out = self._serve_tight(cfg, params, num_pages=4)
+        assert eng.stats["prefill_tokens"] == sum(r.prompt_len for r in out)
+        assert eng.stats["recompute_tokens"] > 0
+        useful = eng.stats["prefill_tokens"] + eng.stats["decode_tokens"]
+        assert eng.throughput() == pytest.approx(
+            useful / eng.stats["wall_s"])
+
+    def test_percentiles_nan_free_with_preempted_requests(self, setup):
+        import math
+        cfg, params = setup
+        eng, out = self._serve_tight(cfg, params, num_pages=4)
+        assert eng.stats["preemptions"] >= 1
+        for k in ("ttft_p50_s", "ttft_p95_s", "decode_tps_p50",
+                  "decode_tps_p95"):
+            assert k in eng.stats
+        assert all(math.isfinite(v) for v in eng.stats.values())
+        assert all(r.ttft_s > 0 for r in out)
+
+    def test_allocate_append_midway_shortfall_rolls_back(self, setup):
+        """On-demand growth that cannot complete leaves the slot's prior
+        coverage and the pool exactly as found (the PR-3 reservation
+        rollback invariant, extended to the append path)."""
+        cfg, _ = setup
+        kv = KVCache(cfg, max_batch=4, max_len=64, layout="paged",
+                     page_size=8, num_pages=5)
+        assert kv.allocate(0, 17)                       # 3 pages
+        assert kv.allocate(1, 8)                        # 1 page -> 1 free
+        free_before = kv.free_pages()
+        table_before = kv.table.copy()
+        owned_before = list(kv._owned[1])
+        in_use = kv.stats["pages_in_use"]
+        # needs 3 more pages with only 1 free: must roll back cleanly
+        assert not kv.allocate_append(1, 32)
+        assert kv.free_pages() == free_before
+        assert (kv.table == table_before).all()
+        assert kv._owned[1] == owned_before
+        assert kv.stats["pages_in_use"] == in_use
+        # the slot can still grow within what the pool has
+        assert kv.allocate_append(1, 16)
+        assert kv.free_pages() == 0
+
+    def test_recycled_pages_posp_reset_before_rehandout(self, setup):
+        """A victim's pages must come back with posp = -1 *before* they
+        are re-handed out: stale positions would pass the attention mask
+        for the preemptor."""
+        from repro.sharding.rules import _path_str
+        cfg, _ = setup
+        kv = KVCache(cfg, max_batch=2, max_len=64, layout="paged",
+                     page_size=8, num_pages=4)
+        assert kv.allocate(0, 17)                       # 3 pages
+        pages = np.asarray(kv._owned[0], np.int32)
+
+        def poison(path, leaf):
+            if _path_str(path).endswith("posp"):
+                idx = (slice(None),) * (leaf.ndim - 2) + (pages,)
+                return leaf.at[idx].set(5)              # fake live positions
+            return leaf
+        kv.caches = jax.tree_util.tree_map_with_path(poison, kv.caches)
+        kv.release(0)                                   # preemption path
+        assert kv.allocate(1, 17)
+        assert set(kv._owned[1]) == set(pages.tolist())  # same physical pages
+
+        def check(path, leaf):
+            if _path_str(path).endswith("posp"):
+                idx = (slice(None),) * (leaf.ndim - 2) + (pages,)
+                assert (np.asarray(leaf[idx]) == -1).all()
+            return leaf
+        jax.tree_util.tree_map_with_path(check, kv.caches)
+
+    def test_scheduler_preempt_lifecycle(self):
+        """preempt() re-queues ahead of fresh WAITING requests, keeps the
+        first t_admit (what Result.queue_delay_s reports), and reassigns
+        admit_seq (the victim-ordering ordinal)."""
+        from repro.serving.scheduler import PREEMPTED
+        s = Scheduler(max_batch=2)
+        a = s.submit(Request(uid=0, prompt=np.zeros(4, np.int32)))
+        b = s.submit(Request(uid=1, prompt=np.zeros(4, np.int32)))
+        s.admit(lambda slot, t: True)
+        c = s.submit(Request(uid=2, prompt=np.zeros(2, np.int32)))
+        s.record_token(b, 3)
+        t_admit, seq = b.t_admit, b.admit_seq
+        s.preempt(b)
+        assert b.state == PREEMPTED and b.slot == -1
+        assert b.result.preemptions == 1
+        assert not s.done()                             # preempted != done
+        admitted = s.admit(lambda slot, t: True)
+        assert admitted == [b]                          # outranks fresh c
+        assert b.t_admit == t_admit                     # first admission kept
+        assert b.admit_seq > seq                        # fresh ordinal
+        assert b.resuming                               # prefill = recompute
+        assert c in s.waiting
+        s.finish(b, "length")
+        assert b.result.queue_delay_s == pytest.approx(
+            t_admit - b.t_submit)                       # not re-admission
+        del a
+
+    def test_mid_prefill_eviction_counts_reprefill_as_recompute(self, setup):
+        """A victim evicted before it ever sampled re-prefills positions
+        already charged as useful work: they must land in
+        recompute_tokens, not inflate prefill_tokens past one count per
+        prompt position.  Scenario: slot A decodes and crosses a page
+        boundary on a dry pool while B (24-token prompt, 6 chunk steps)
+        is still prefilling -- B is the last-admitted victim."""
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4,
+                     cache_layout="paged", page_size=4, num_pages=8)
+        rng = np.random.default_rng(3)
+        reqs = [Request(uid=0, prompt=rng.integers(0, cfg.vocab_size,
+                                                   4).astype(np.int32),
+                        max_new_tokens=12),
+                Request(uid=1, prompt=rng.integers(0, cfg.vocab_size,
+                                                   24).astype(np.int32),
+                        max_new_tokens=4)]
+        out = eng.serve(reqs, max_steps=400)
+        assert eng.stats["preemptions"] >= 1
+        assert out[1].preemptions >= 1 and out[1].recompute_tokens > 0
+        assert len(out[1].tokens) == 4                  # B still completed
+        assert eng.stats["prefill_tokens"] == sum(len(r.prompt)
+                                                  for r in reqs)
+        assert eng.stats["recompute_tokens"] == sum(r.recompute_tokens
+                                                    for r in out)
+
+    def test_preemption_requires_paged_layout(self, setup):
+        cfg, params = setup
+        with pytest.raises(ValueError, match="paged"):
+            Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=0,
+                   cache_layout="contiguous", preemption=True)
+
+    def test_abort_of_queued_preempted_request_keeps_latency(self):
+        """A preempted request drained from the queue by an abort keeps
+        the TTFT / queue-delay it earned before eviction, exactly as a
+        live-slot victim finished by the same abort would."""
+        s = Scheduler(max_batch=1)
+        t = s.submit(Request(uid=0, prompt=np.zeros(4, np.int32),
+                             max_new_tokens=8))
+        s.admit(lambda slot, tr: True)
+        s.record_token(t, 5)
+        s.preempt(t)
+        s.reject(t, "aborted_max_steps")
+        assert s.done()
+        assert t.result.finished_reason == "aborted_max_steps"
+        assert t.result.tokens == [5]
+        assert t.result.ttft_s > 0
+        assert t.result.queue_delay_s >= 0 and t.t_admit > 0
+
+    def test_engine_reusable_after_max_steps_abort(self, setup):
+        """The max_steps livelock guard must drain what it interrupts:
+        pages back, slots clear, uid claims releasable -- the next serve
+        on the same engine (same uids) runs normally."""
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4,
+                     cache_layout="paged", page_size=8)
+        reqs = lambda: [Request(uid=0, prompt=np.arange(6, dtype=np.int32),
+                                max_new_tokens=8)]
+        with pytest.raises(RuntimeError, match="max_steps"):
+            eng.serve(reqs(), max_steps=1)
+        assert eng.sched.done()
+        assert eng.kv.stats["pages_in_use"] == 0
+        out = eng.serve(reqs())
+        assert len(out[0].tokens) == 8
+        assert out[0].finished_reason in ("length", "eos")
+
+
 class TestDuplicateUids:
     """Results are keyed and sorted by uid; duplicates must be refused."""
 

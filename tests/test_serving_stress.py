@@ -1,0 +1,236 @@
+"""Randomized serving stress harness: preemptive continuous batching under
+KV pool pressure (DESIGN.md §6).
+
+Hypothesis-driven fuzz over (prompt lengths, max_new, EOS timing, batch
+size, page size, pool size down to the prompt-only minimum, fifo/sjf,
+LExI plan on/off).  Every workload is checked against three invariants:
+
+1. **Oracle equivalence** -- per-request tokens (and finish reasons) are
+   byte-identical to an engine with an unlimited pool; requests whose
+   worst-case page need exceeds the pool are refused at submit
+   (``rejected_kv_capacity``) and excluded, everything else must survive
+   any amount of preemption-and-recompute unchanged, and streaming
+   callbacks must emit each token exactly once.
+2. **Drain** -- after serve() the pool is empty (``pages_in_use == 0``,
+   every page back on the free list, ``pages_peak`` within the pool) and
+   every uid claim is released.
+3. **Progress** -- every admitted request finishes within a generous step
+   bound (no livelock under repeated preemption).
+
+Profiles: the default is bounded and derandomized (deterministic in CI);
+``HYPOTHESIS_PROFILE=dev pytest tests/test_serving_stress.py`` fuzzes
+deeper locally.  The settings are applied per-test, not via a global
+``settings.load_profile`` -- a module-level profile load at collection
+time would silently derandomize every other property suite in the
+session.  Engines are cached per configuration key so repeated examples
+reuse compiled graphs (the strategy space is quantized to keep that
+cache small).
+"""
+
+import math
+import os
+
+import jax
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import models
+from repro.configs import get_config
+from repro.core import uniform_plan
+from repro.serving import Engine, Request
+
+_SETTINGS = (dict(max_examples=40, deadline=None)
+             if os.environ.get("HYPOTHESIS_PROFILE") == "dev"
+             else dict(max_examples=10, deadline=None, derandomize=True))
+
+# quantized workload domain: pool sizes are derived from these constants
+# (not from the draws), so the engine cache key space stays small
+MAX_LEN = 64
+CHUNK = 4
+PLEN_MAX = 20
+MNEW_MAX = 8
+PAGE_SIZES = (4, 8)
+POLICIES = ("fifo", "sjf")
+STEP_BOUND = 1500
+
+
+def _pool_options(page_size: int):
+    """Usable-page pool sizes, tightest first: the prompt-only admission
+    minimum (some requests' worst case may not fit at all), one request's
+    worst case, twice that, and the unlimited default."""
+    prompt_min = -(-PLEN_MAX // page_size)
+    single = -(-(PLEN_MAX + MNEW_MAX) // page_size)
+    return (prompt_min, single, 2 * single, None)
+
+
+_STATE: dict = {}
+
+
+def _setup():
+    """Module-level lazy state (not a fixture: the conftest hypothesis
+    fallback hides @given args from pytest's fixture resolution, so a
+    property test cannot also request fixtures)."""
+    if not _STATE:
+        cfg = get_config("olmoe-1b-7b").reduced().with_(
+            num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+            head_dim=32, num_experts=4, moe_top_k=2, moe_d_ff=64,
+            vocab_size=128, vocab_pad_multiple=16, dtype="float32",
+            moe_impl="gmm")
+        _STATE["cfg"] = cfg
+        _STATE["params"] = models.init_params(jax.random.PRNGKey(0), cfg)
+        _STATE["plan"] = uniform_plan(cfg, 1)
+        _STATE["engines"] = {}
+    return _STATE["cfg"]
+
+
+def _engine(batch, page_size=8, pool_idx=3, policy="fifo"):
+    """One cached engine per configuration key: examples reuse compiled
+    graphs, and reusing uids across serves is the supported pattern."""
+    cfg = _setup()
+    key = (batch, page_size, pool_idx, policy)
+    if key not in _STATE["engines"]:
+        eng = Engine(cfg, _STATE["params"], max_batch=batch,
+                     max_len=MAX_LEN, prefill_chunk=CHUNK,
+                     cache_layout="paged", page_size=page_size,
+                     num_pages=_pool_options(page_size)[pool_idx],
+                     scheduler=policy)
+        eng.add_plan("lexi", _STATE["plan"])
+        _STATE["engines"][key] = eng
+    return _STATE["engines"][key]
+
+
+def _workload(vocab: int, n_req: int, seed: int, streams=None):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_req):
+        plen = int(rng.integers(1, PLEN_MAX + 1))
+        mnew = int(rng.integers(0, MNEW_MAX + 1))
+        stream = None
+        if streams is not None:
+            streams[i] = []
+            stream = (lambda uid, tok, s=streams: s[uid].append(tok))
+        reqs.append(Request(uid=i,
+                            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+                            max_new_tokens=mnew, stream=stream))
+    return reqs
+
+
+class TestServingStress:
+    @settings(**_SETTINGS)
+    @given(st.integers(0, len(PAGE_SIZES) - 1),    # page size
+           st.integers(0, 3),                      # pool tightness
+           st.integers(0, 1),                      # fifo / sjf
+           st.integers(2, 3),                      # max_batch
+           st.integers(1, 6),                      # request count
+           st.integers(0, 3),                      # eos timing (0 = none)
+           st.booleans(),                          # LExI plan on/off
+           st.integers(0, 10**6))                  # workload seed
+    def test_invariants_under_pool_pressure(self, page_idx, pool_idx,
+                                            policy_idx, batch, n_req,
+                                            eos_mode, plan_on, seed):
+        cfg = _setup()
+        page_size = PAGE_SIZES[page_idx]
+        plan_kw = {"plan": "lexi"} if plan_on else {}
+
+        # oracle: same workload, unlimited pool (no preemption possible)
+        oracle = _engine(batch)
+        oracle.eos_id = None
+        probe = oracle.serve(_workload(cfg.vocab_size, n_req, seed),
+                             max_steps=STEP_BOUND, **plan_kw)
+        eos_id = None
+        generated = [t for r in probe for t in r.tokens]
+        if eos_mode and generated:
+            eos_id = int(generated[(eos_mode * 7) % len(generated)])
+            oracle.eos_id = eos_id
+            ref = oracle.serve(_workload(cfg.vocab_size, n_req, seed),
+                               max_steps=STEP_BOUND, **plan_kw)
+        else:
+            ref = probe
+
+        eng = _engine(batch, page_size, pool_idx, POLICIES[policy_idx])
+        eng.eos_id = eos_id
+        streams = {}
+        # invariant 3 rides on max_steps: livelock raises RuntimeError
+        out = eng.serve(_workload(cfg.vocab_size, n_req, seed, streams),
+                        max_steps=STEP_BOUND, **plan_kw)
+
+        # invariant 1: oracle equivalence (capacity refusals excluded)
+        usable = eng.kv.num_pages - 1
+        for r, ro in zip(out, ref):
+            if r.finished_reason == "rejected_kv_capacity":
+                worst = eng.kv.pages_needed(
+                    r.prompt_len + next(q.max_new_tokens for q in
+                                        _workload(cfg.vocab_size, n_req, seed)
+                                        if q.uid == r.uid))
+                assert worst > usable, "refusal without a capacity reason"
+                continue
+            assert r.tokens == ro.tokens, f"uid {r.uid} diverged"
+            assert r.finished_reason == ro.finished_reason, f"uid {r.uid}"
+            assert streams[r.uid] == r.tokens, f"uid {r.uid} stream"
+
+        # invariant 2: the pool and the uid claims fully drain
+        assert eng.kv.stats["pages_in_use"] == 0
+        assert eng.kv.free_pages() == usable
+        assert eng.kv.stats["pages_peak"] <= usable
+        assert eng.sched.done()
+        eng.sched.clear_finished()
+        assert not eng.sched._uids
+
+        # accounting: prefill counts useful work once; recompute is separate
+        served_plen = sum(r.prompt_len for r in out
+                          if not r.finished_reason.startswith("rejected"))
+        assert eng.stats["prefill_tokens"] == served_plen
+        if eng.stats["preemptions"] == 0:
+            assert eng.stats["recompute_tokens"] == 0
+        assert eng.stats["recompute_tokens"] == sum(r.recompute_tokens
+                                                    for r in out)
+        assert all(math.isfinite(v) for v in eng.stats.values())
+
+
+class TestPoolPressureAcceptance:
+    def test_half_pool_serves_what_reservation_cannot_admit(self):
+        """At a pool 0.5x the worst-case reservation, on-demand+preempt
+        runs a 16-request mixed workload fully concurrently (live_peak =
+        16) and byte-identical to the unlimited-pool oracle, while the
+        whole-lifetime reservation baseline cannot even admit the batch
+        concurrently on the same pool."""
+        cfg = get_config("olmo-1b").reduced().with_(
+            num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+            head_dim=32, d_ff=128, vocab_size=128, vocab_pad_multiple=16,
+            dtype="float32")
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        page = 4
+        n_req, max_new = 16, 16
+        rng = np.random.default_rng(7)
+        lens = [int(rng.integers(4, 17)) for _ in range(n_req)]
+
+        def reqs():
+            r = np.random.default_rng(9)
+            return [Request(uid=i,
+                            prompt=r.integers(0, cfg.vocab_size,
+                                              n).astype(np.int32),
+                            max_new_tokens=max_new)
+                    for i, n in enumerate(lens)]
+
+        worst = sum(-(-(n + max_new) // page) for n in lens)
+        pool = -(-worst // 2)                           # 0.5x worst case
+        kw = dict(max_batch=n_req, max_len=64, prefill_chunk=CHUNK,
+                  cache_layout="paged", page_size=page)
+
+        oracle = Engine(cfg, params, **kw)
+        ref = oracle.serve(reqs(), max_steps=STEP_BOUND)
+        assert oracle.stats["preemptions"] == 0
+
+        ondemand = Engine(cfg, params, num_pages=pool, **kw)
+        out = ondemand.serve(reqs(), max_steps=STEP_BOUND)
+        assert [r.tokens for r in out] == [r.tokens for r in ref]
+        assert ondemand.stats["live_peak"] == n_req     # fully concurrent
+        assert ondemand.stats["preemptions"] > 0        # pressure was real
+        assert ondemand.kv.stats["pages_peak"] <= pool
+
+        reserve = Engine(cfg, params, num_pages=pool, preemption=False,
+                         **kw)
+        res = reserve.serve(reqs(), max_steps=STEP_BOUND)
+        assert [r.tokens for r in res] == [r.tokens for r in ref]
+        assert reserve.stats["live_peak"] < n_req       # pool-bound admission
