@@ -20,6 +20,49 @@ from benchmarks.common import CSV
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
 
+#: expert-tile storage bytes per parameter by weight dtype.  int4 packs two
+#: params per byte; the f32 scale rows are accounted separately (they are
+#: 1/D resp. 1/(2F) the size of the tiles they scale).
+WEIGHT_BYTES = {"f32": 4.0, "bf16": 2.0, "int8": 1.0, "int4": 0.5}
+
+
+def expert_weight_roofline(*, n_tokens: int, top_k: int, d_model: int,
+                           d_ff: int, weight_dtype: str, act_bytes: int = 4,
+                           peak_flops: float = 197e12,
+                           hbm_bw: float = 819e9) -> dict:
+    """Roofline terms for one decode-regime routed-expert FFN layer.
+
+    The fused decode path re-reads each routed expert's w1/w2 tiles per
+    (token, slot), so weight traffic scales with the *weight dtype* --
+    which is the whole lever quantized tiles pull: at T*k distinct
+    (token, slot) pairs the layer moves ``T*k * 3*D*F * bytes(dtype)``
+    weight bytes (+ f32 scale rows for quantized dtypes) against a fixed
+    ``6*T*k*D*F`` flops.  Decode T is tiny, so the layer sits deep in the
+    memory-bound regime and predicted speedup from quantization is just
+    the byte ratio.  Defaults for peak/bw follow analysis/roofline.HW.
+    """
+    if weight_dtype not in WEIGHT_BYTES:
+        raise ValueError(f"weight_dtype {weight_dtype!r}; "
+                         f"want one of {sorted(WEIGHT_BYTES)}")
+    flops = 6.0 * n_tokens * top_k * d_model * d_ff
+    tile_params = 3.0 * d_model * d_ff              # w1 [D,2F] + w2 [F,D]
+    w_bytes = n_tokens * top_k * tile_params * WEIGHT_BYTES[weight_dtype]
+    if weight_dtype in ("int8", "int4"):
+        w_bytes += n_tokens * top_k * 3.0 * d_ff * 4.0   # s1 [2,F] + s2 [F]
+    a_bytes = n_tokens * (2.0 * d_model + 2.0 * d_ff) * act_bytes
+    t_comp = flops / peak_flops
+    t_mem = (w_bytes + a_bytes) / hbm_bw
+    return {
+        "weight_dtype": weight_dtype,
+        "flops": flops,
+        "weight_bytes": w_bytes,
+        "act_bytes": a_bytes,
+        "t_compute": t_comp,
+        "t_memory": t_mem,
+        "bound": "memory" if t_mem >= t_comp else "compute",
+        "bound_time_s": max(t_mem, t_comp),
+    }
+
 
 def load_records(d: str = DRYRUN_DIR):
     recs = []
@@ -30,6 +73,16 @@ def load_records(d: str = DRYRUN_DIR):
 
 
 def run(csv: CSV, *, fast: bool = False) -> None:
+    # predicted decode-regime expert-weight roofline by storage dtype (the
+    # measured counterpart is bench_moe_dispatch's decode ablation)
+    for dt in ("bf16", "int8", "int4"):
+        for t in (1, 8):
+            r = expert_weight_roofline(n_tokens=t, top_k=8, d_model=256,
+                                       d_ff=128, weight_dtype=dt)
+            csv.add(f"roofline/expert_dtype/{dt}/T{t}",
+                    r["bound_time_s"] * 1e6,
+                    f"bound={r['bound']};w_bytes={r['weight_bytes']:.3e};"
+                    f"t_mem={r['t_memory']:.3e};t_comp={r['t_compute']:.3e}")
     recs = load_records()
     if not recs:
         csv.add("roofline/missing", 0.0,

@@ -9,6 +9,8 @@ same weights, one runner, measured tokens/s for
   * paged+chunked with a LExI plan vs the uniform-k baseline,
   * the two paged cells again with the fused decode-MoE path
     (``use_moe_decode=True``, DESIGN.md §5),
+  * the fused cell once more over int8-quantized expert tiles
+    (``expert_dtype=``, quantize-at-load + in-kernel dequant, DESIGN.md §7),
 
 plus the gather-vs-in-kernel paged-decode ablation at long context: same
 paged layout, decode attention either gathering the pool into the full
@@ -260,7 +262,10 @@ def _pool_pressure_ablation(cfg, params, csv: CSV, *, fast: bool) -> dict:
     return abl
 
 
-def run(csv: CSV, *, fast: bool = False) -> None:
+def run(csv: CSV, *, fast: bool = False, expert_dtype: str = "int8") -> None:
+    """``expert_dtype`` selects the quantized variant of the fused-decode
+    engine measured against its full-precision twin (int8 by default;
+    "bf16" skips the quantized cell)."""
     cfg, params, dc, _ = trained_tiny_moe(steps=60 if fast else 200)
     cfg = cfg.with_(moe_impl="gmm")     # dropless production dispatch
     n_req = 4 if fast else 8
@@ -297,6 +302,15 @@ def run(csv: CSV, *, fast: bool = False) -> None:
         "paged_chunked_moedecode": (eng_fused, None),
         "paged_chunked_lexi_moedecode": (eng_fused, "lexi"),
     }
+    if expert_dtype != "bf16":
+        # fused-decode engine over quantized expert tiles (quantize-at-
+        # load; same weights otherwise) -- the end-to-end twin of the
+        # per-layer quant cells in BENCH_moe_dispatch.json
+        eng_fused_q = Engine(cfg, params, cache_layout="paged",
+                             use_moe_decode=True, expert_dtype=expert_dtype,
+                             **ekw)
+        cells[f"paged_chunked_moedecode_{expert_dtype}"] = (eng_fused_q,
+                                                            None)
     measured = _interleaved_serves(cells, cfg.vocab_size, n_req, reps=reps)
     for name, (tput, stats, med_wall) in measured.items():
         out["tok_per_s"][name] = round(tput, 2)
@@ -331,6 +345,10 @@ def run(csv: CSV, *, fast: bool = False) -> None:
         "note": "toy-scale E=8/k=4 favors gmm in absolute tok/s; see "
                 "decode_ablation in BENCH_moe_dispatch.json (E=64) and "
                 "DESIGN.md §5 'when gmm remains right'"}
+    qcell = f"paged_chunked_moedecode_{expert_dtype}"
+    if qcell in tps:
+        out["moe_decode"][f"{expert_dtype}_speedup_vs_native_fused"] = round(
+            tps[qcell] / max(tps["paged_chunked_moedecode"], 1e-9), 3)
 
     # gather-vs-in-kernel paged decode: a table much wider than the live
     # context (the long-max_len serving regime paged attention exists
@@ -355,6 +373,15 @@ def run(csv: CSV, *, fast: bool = False) -> None:
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--expert-dtype", choices=["bf16", "int8", "int4"],
+                    default="int8",
+                    help="dtype of the quantized fused-decode serve cell "
+                         "('bf16' skips it)")
+    args = ap.parse_args()
     c = CSV()
     c.header()
-    run(c)
+    run(c, fast=args.fast, expert_dtype=args.expert_dtype)

@@ -57,6 +57,18 @@ except ImportError:
     def _booleans():
         return _BoolStrategy()
 
+    class _SampledStrategy:
+        def __init__(self, elements):
+            self.elems = list(elements)
+
+        def draw(self, rng, i):
+            if i < len(self.elems):
+                return self.elems[i]    # endpoints first: each element once
+            return rng.choice(self.elems)
+
+    def _sampled_from(elements):
+        return _SampledStrategy(elements)
+
     def _given(*strats):
         def deco(fn):
             def wrapper(*args, **kwargs):
@@ -89,6 +101,7 @@ except ImportError:
     _st.integers = _integers
     _st.floats = _floats
     _st.booleans = _booleans
+    _st.sampled_from = _sampled_from
     _h.strategies = _st
     sys.modules["hypothesis"] = _h
     sys.modules["hypothesis.strategies"] = _st

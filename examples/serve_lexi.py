@@ -11,6 +11,8 @@ import argparse
 import numpy as np
 
 from repro.core import apply_plan_params, optimize
+from repro.models.moe import quantize_expert_params
+from repro.models.opts import ModelOpts
 from repro.serving import Engine, Request
 from repro.training import eval_perplexity
 
@@ -27,6 +29,11 @@ def main():
                     default=None,
                     help="on-demand paging + preempt-and-recompute (default "
                          "on); --no-preemption reserves whole lifetimes")
+    ap.add_argument("--expert-dtype", choices=["bf16", "int8", "int4"],
+                    default="bf16",
+                    help="expert-tile storage dtype for BOTH engines "
+                         "(quantize-at-load; ppl is evaluated through the "
+                         "same quantized gmm path)")
     args = ap.parse_args()
 
     # -- train a small MoE so routing has real structure ------------------- #
@@ -49,13 +56,23 @@ def main():
                         max_new_tokens=args.max_new)
                 for i in range(args.requests)]
 
+    # quantized runs evaluate ppl through the same quantized gmm path the
+    # engine serves, so the quality number matches what is deployed
+    ed = args.expert_dtype
+    ppl_opts = ModelOpts(moe_impl="gmm", expert_dtype=ed)
+    def ppl(p, c):
+        if ed != "bf16":
+            p = quantize_expert_params(p, c, ed)
+        return eval_perplexity(p, c, dc, steps=4, opts=ppl_opts)
+
     # -- ONE engine, one set of weights, two specializations ---------------- #
     eng = Engine(cfg, params, max_batch=4, max_len=128, prefill_pad=16,
-                 num_pages=args.num_pages, preemption=args.preemption)
+                 num_pages=args.num_pages, preemption=args.preemption,
+                 expert_dtype=ed)
     eng.serve(reqs())
     base_tput = eng.throughput()
-    base_ppl = eval_perplexity(params, cfg, dc, steps=4)
-    print(f"baseline  top-k={cfg.moe_top_k}: "
+    base_ppl = ppl(params, cfg)
+    print(f"baseline  top-k={cfg.moe_top_k} experts={ed}: "
           f"{base_tput:8.1f} tok/s   ppl={base_ppl:.3f}")
 
     # -- LExI plan at 50% budget served from the SAME runner ---------------- #
@@ -66,7 +83,7 @@ def main():
     eng.serve(reqs(), plan="lexi")
     lexi_tput = eng.throughput()
     cfg_l, params_l = apply_plan_params(params, cfg, plan)
-    lexi_ppl = eval_perplexity(params_l, cfg_l, dc, steps=4)
+    lexi_ppl = ppl(params_l, cfg_l)
     print(f"LExI plan {plan.plan}: "
           f"{lexi_tput:8.1f} tok/s   ppl={lexi_ppl:.3f}")
     print(f"-> {lexi_tput / base_tput:.2f}x throughput at "

@@ -126,7 +126,30 @@ def moe_decode_pallas(x, w1, w2, idx, weights, *, block_f: int = 256,
     )(idx.astype(jnp.int32), x, weights.astype(jnp.float32), w1v, w2)
 
 
-def moe_decode_routed_jnp(x, w1, w2, idx, weights):
+def _lookahead_gather(w, idx, pred_idx):
+    """Staged gather with hit-select (numerically a no-op).
+
+    The staged gather depends only on ``pred_idx`` -- ids predicted one
+    layer ahead from the *previous* layer's pre-FFN hidden -- so in the
+    layer-stack graph it is schedulable before this layer's attention and
+    router run, overlapping weight loads with compute.  The fresh gather
+    (true ids) backs up every mispredicted slot: where ``pred == idx`` the
+    select returns the staged block (bitwise equal to the fresh one), so
+    the result is exactly the plain gather whatever the hit rate.
+    """
+    staged = jnp.take(w, pred_idx, axis=0)
+    fresh = jnp.take(w, idx, axis=0)
+    hit = (pred_idx == idx).reshape(idx.shape + (1,) * (w.ndim - 1))
+    return jnp.where(hit, staged, fresh)
+
+
+def _gather(w, idx, pred_idx):
+    if pred_idx is None:
+        return jnp.take(w, idx, axis=0)
+    return _lookahead_gather(w, idx, pred_idx)
+
+
+def moe_decode_routed_jnp(x, w1, w2, idx, weights, pred_idx=None):
     """jnp path with identical semantics (CPU fallback / non-kernel impl).
 
     Gathers the k routed experts' weight blocks per token and contracts in
@@ -134,13 +157,189 @@ def moe_decode_routed_jnp(x, w1, w2, idx, weights):
     The weight gather materializes [B, k, D, 2F] copies, which is exactly
     the traffic the TPU kernel's per-expert DMA avoids; at decode-shaped B
     it is still far below the gmm path's padded-tile buffer.
+
+    ``pred_idx`` (router lookahead, [B, k] i32) stages the gathers on ids
+    available before this layer's router runs; see ``_lookahead_gather``.
     """
-    w1g = jnp.take(w1, idx, axis=0)                           # [B, k, D, 2F]
-    w2g = jnp.take(w2, idx, axis=0)                           # [B, k, F, D]
+    w1g = _gather(w1, idx, pred_idx)                          # [B, k, D, 2F]
+    w2g = _gather(w2, idx, pred_idx)                          # [B, k, F, D]
     h = jnp.einsum("bd,bkdf->bkf", x.astype(jnp.float32),
                    w1g.astype(jnp.float32))
     gate, up = jnp.split(h, 2, axis=-1)
     h = jax.nn.silu(gate) * up                                # [B, k, F]
+    y = jnp.einsum("bkf,bkfd,bk->bd", h, w2g.astype(jnp.float32),
+                   weights.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Quantized expert tiles: in-kernel dequant (DESIGN.md §7)
+# --------------------------------------------------------------------------- #
+
+
+def _unpack_int4_cols(p32, axis: int):
+    """int8-packed nibble pairs -> two int32 half-arrays (lo, hi).
+
+    Blocked-halves layout (``models/moe/params.py``): byte i along
+    ``axis`` packs element i (low nibble, ``(x ^ 8) - 8`` sign-extend)
+    and element i + n//2 (high nibble, arithmetic-shift sign-extend).
+    """
+    del axis  # packed axis is implicit: the caller slices/concats
+    lo = ((p32 & 0xF) ^ 8) - 8
+    hi = p32 >> 4
+    return lo, hi
+
+
+def _quant_kernel(idx_ref, x_ref, w_ref, w1_ref, w2_ref, s1_ref, s2_ref,
+                  o_ref, acc_ref, *, n_k_slots: int, n_f_steps: int,
+                  packed: bool):
+    """One (token, k-slot, f-step) grid cell over int8-stored tiles.
+
+    Same walk as ``_kernel``; the expert tiles arrive int8 (int4: packed
+    two-per-byte along D) with their scale rows sliced by the *same*
+    scalar-prefetched index maps:
+
+    w1_ref  [1, D(p), 2, bf] int8   fused gate/up tile of expert idx[b, j]
+    w2_ref  [1, bf, D(p)]   int8    down-projection tile
+    s1_ref  [1, 2, bf] f32          per-(gate|up, f-column) scales
+    s2_ref  [1, bf] f32             per-f-row scales
+
+    Dequant placement follows the scale layout: s1 multiplies *after* the
+    x @ w1q dots (constant along the D contraction), s2 folds into ``h``
+    *before* the h @ w2q dot (it varies along the F contraction and
+    cannot move past it).  Accumulation stays f32 in VMEM -- identical to
+    the bf16 path's numerics once tiles are dequantized.
+    """
+    del idx_ref
+    j = pl.program_id(1)
+    fi = pl.program_id(2)
+
+    @pl.when((j == 0) & (fi == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                        # [1, D]
+    if packed:
+        d_half = x.shape[1] // 2
+        lo1, hi1 = _unpack_int4_cols(w1_ref[0].astype(jnp.int32), 0)
+        gate = (jax.lax.dot(x[:, :d_half], lo1[:, 0, :].astype(jnp.float32))
+                + jax.lax.dot(x[:, d_half:], hi1[:, 0, :].astype(jnp.float32)))
+        up = (jax.lax.dot(x[:, :d_half], lo1[:, 1, :].astype(jnp.float32))
+              + jax.lax.dot(x[:, d_half:], hi1[:, 1, :].astype(jnp.float32)))
+    else:
+        w1f = w1_ref[0].astype(jnp.float32)                   # [D, 2, bf]
+        gate = jax.lax.dot(x, w1f[:, 0, :])
+        up = jax.lax.dot(x, w1f[:, 1, :])
+    gate = gate * s1_ref[0, 0, :]
+    up = up * s1_ref[0, 1, :]
+    h = jax.nn.silu(gate) * up * s2_ref[0, :]                 # [1, bf]
+    if packed:
+        lo2, hi2 = _unpack_int4_cols(w2_ref[0].astype(jnp.int32), 1)
+        partial = jnp.concatenate(
+            [jax.lax.dot(h, lo2.astype(jnp.float32)),
+             jax.lax.dot(h, hi2.astype(jnp.float32))], axis=-1)
+    else:
+        partial = jax.lax.dot(h, w2_ref[0].astype(jnp.float32))  # [1, D]
+    acc_ref[...] += w_ref[0, 0] * partial
+
+    @pl.when((j == n_k_slots - 1) & (fi == n_f_steps - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _block_f(f: int, block_f: int) -> int:
+    bf = min(block_f, f)
+    while f % bf:
+        bf //= 2
+    return max(bf, 1)
+
+
+def moe_decode_quant_pallas(x, w1q, w2q, s1, s2, idx, weights, *,
+                            dtype: str, block_f: int = 256,
+                            interpret: bool = False):
+    """Quantized fused routed-expert SwiGLU with in-kernel dequant.
+
+    x [B, D]; w1q int8 [E, D, 2F] (int4: [E, D//2, 2F]); w2q int8
+    [E, F, D] (int4: [E, F, D//2]); s1 f32 [E, 2, F]; s2 f32 [E, F];
+    idx/weights [B, k] -> y [B, D] in x.dtype.
+
+    The scale rows ride the same scalar-prefetched routed ids as the
+    weight tiles: per (token, slot, f-step) grid cell the BlockSpec index
+    maps DMA expert ``idx[b, j]``'s quantized tile *and* its (1, 2, bf) /
+    (1, bf) scale slices -- quantization adds no second indexing scheme.
+    """
+    if dtype not in ("int8", "int4"):
+        raise ValueError(f"unsupported expert dtype {dtype!r}")
+    packed = dtype == "int4"
+    b, d = x.shape
+    e, f = w2q.shape[0], w2q.shape[1]
+    k = idx.shape[1]
+    dp = d // 2 if packed else d
+    assert w1q.shape == (e, dp, 2 * f), (w1q.shape, (e, dp, 2 * f))
+    assert w2q.shape == (e, f, dp), (w2q.shape, (e, f, dp))
+    assert s1.shape == (e, 2, f) and s2.shape == (e, f), (s1.shape, s2.shape)
+    assert not packed or d % 2 == 0, d
+    assert idx.shape == (b, k) and weights.shape == (b, k), \
+        (idx.shape, weights.shape)
+    bf = _block_f(f, block_f)
+    n_f = f // bf
+
+    w1v = w1q.reshape(e, dp, 2, f)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k, n_f),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b_, j_, fi, idx: (b_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, j_, fi, idx: (b_, j_)),
+            pl.BlockSpec((1, dp, 2, bf),
+                         lambda b_, j_, fi, idx: (idx[b_, j_], 0, 0, fi)),
+            pl.BlockSpec((1, bf, dp),
+                         lambda b_, j_, fi, idx: (idx[b_, j_], fi, 0)),
+            pl.BlockSpec((1, 2, bf),
+                         lambda b_, j_, fi, idx: (idx[b_, j_], 0, fi)),
+            pl.BlockSpec((1, bf),
+                         lambda b_, j_, fi, idx: (idx[b_, j_], fi)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b_, j_, fi, idx: (b_, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, n_k_slots=k, n_f_steps=n_f,
+                          packed=packed),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x, weights.astype(jnp.float32), w1v, w2q,
+      s1.astype(jnp.float32), s2.astype(jnp.float32))
+
+
+def moe_decode_routed_quant_jnp(x, w1q, w2q, s1, s2, idx, weights, *,
+                                dtype: str, pred_idx=None):
+    """Quantized jnp fallback: dequant-after-gather.
+
+    The gathers move int8 (int4: packed) copies -- 1/2 (1/4) the bytes of
+    the full-precision fallback's [B, k, D, 2F] blocks, matching the
+    kernel's bytes-side semantics -- plus tiny f32 scale rows; dequant is
+    a scale multiply placed exactly where the kernel places it (s1 after
+    the w1 dot, s2 folded into h before the w2 dot).  ``pred_idx`` stages
+    the gathers as in ``moe_decode_routed_jnp``.
+    """
+    if dtype not in ("int8", "int4"):
+        raise ValueError(f"unsupported expert dtype {dtype!r}")
+    b, d = x.shape
+    f = w2q.shape[1]
+    w1g = _gather(w1q, idx, pred_idx)         # [B, k, D(p), 2F] int8
+    w2g = _gather(w2q, idx, pred_idx)         # [B, k, F, D(p)] int8
+    s1g = _gather(s1, idx, pred_idx)          # [B, k, 2, F] f32
+    s2g = _gather(s2, idx, pred_idx)          # [B, k, F] f32
+    if dtype == "int4":
+        from repro.models.moe.params import unpack_int4
+        w1g = unpack_int4(w1g, axis=2)
+        w2g = unpack_int4(w2g, axis=3)
+    h = jnp.einsum("bd,bkdf->bkf", x.astype(jnp.float32),
+                   w1g.astype(jnp.float32))
+    h = h.reshape(b, -1, 2, f) * s1g          # [B, k, 2, F]
+    h = jax.nn.silu(h[:, :, 0, :]) * h[:, :, 1, :] * s2g     # [B, k, F]
     y = jnp.einsum("bkf,bkfd,bk->bd", h, w2g.astype(jnp.float32),
                    weights.astype(jnp.float32))
     return y.astype(x.dtype)

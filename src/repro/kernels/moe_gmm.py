@@ -118,3 +118,122 @@ def moe_gmm_pallas(xs, w1, w2, tile_expert, tile_valid, *, block_m: int,
         out_shape=jax.ShapeDtypeStruct((m, d), xs.dtype),
         interpret=interpret,
     )(tile_expert, tile_valid, xs, w1v, w2)
+
+
+# --------------------------------------------------------------------------- #
+# Quantized expert tiles: in-kernel dequant (DESIGN.md §7)
+# --------------------------------------------------------------------------- #
+
+
+def _quant_kernel(te_ref, tv_ref, x_ref, w1_ref, w2_ref, s1_ref, s2_ref,
+                  o_ref, acc_ref, *, n_f_steps: int, packed: bool):
+    """One (row-tile, f-step) block over int8-stored expert tiles.
+
+    Same tile walk and dead-tile handling as ``_kernel``; the weight
+    slices arrive int8 (int4: packed two-per-byte along D, blocked
+    halves) with their scale rows sliced by the same ``te``-prefetched
+    index maps.  Dequant placement matches the decode kernel: s1 after
+    the x @ w1q dots (constant along D), s2 folded into h before the
+    h @ w2q dot (varies along the F contraction).  f32 accumulation.
+    """
+    del te_ref
+    i = pl.program_id(0)
+    f_step = pl.program_id(1)
+
+    @pl.when(tv_ref[i] == 1)
+    def _compute():
+        x = x_ref[...].astype(jnp.float32)                   # [bm, D]
+        if packed:
+            d_half = x.shape[1] // 2
+            p32 = w1_ref[0].astype(jnp.int32)                # [D//2, 2, bf]
+            lo = (((p32 & 0xF) ^ 8) - 8).astype(jnp.float32)
+            hi = (p32 >> 4).astype(jnp.float32)
+            gate = (jax.lax.dot(x[:, :d_half], lo[:, 0, :])
+                    + jax.lax.dot(x[:, d_half:], hi[:, 0, :]))
+            up = (jax.lax.dot(x[:, :d_half], lo[:, 1, :])
+                  + jax.lax.dot(x[:, d_half:], hi[:, 1, :]))
+        else:
+            w1f = w1_ref[0].astype(jnp.float32)              # [D, 2, bf]
+            gate = jax.lax.dot(x, w1f[:, 0, :])
+            up = jax.lax.dot(x, w1f[:, 1, :])
+        gate = gate * s1_ref[0, 0, :]
+        up = up * s1_ref[0, 1, :]
+        h = jax.nn.silu(gate) * up * s2_ref[0, :]            # [bm, bf]
+        if packed:
+            p32 = w2_ref[0].astype(jnp.int32)                # [bf, D//2]
+            lo = (((p32 & 0xF) ^ 8) - 8).astype(jnp.float32)
+            hi = (p32 >> 4).astype(jnp.float32)
+            partial = jnp.concatenate(
+                [jax.lax.dot(h, lo), jax.lax.dot(h, hi)], axis=-1)
+        else:
+            partial = jax.lax.dot(h, w2_ref[0].astype(jnp.float32))
+
+        @pl.when(f_step == 0)
+        def _init():
+            acc_ref[...] = partial
+
+        @pl.when(f_step > 0)
+        def _acc():
+            acc_ref[...] += partial
+
+    @pl.when(f_step == n_f_steps - 1)
+    def _flush():
+        @pl.when(tv_ref[i] == 1)
+        def _out():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+        @pl.when(tv_ref[i] == 0)
+        def _dead():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def moe_gmm_quant_pallas(xs, w1q, w2q, s1, s2, tile_expert, tile_valid, *,
+                         dtype: str, block_m: int, block_f: int = 256,
+                         interpret: bool = False):
+    """Quantized ragged grouped SwiGLU FFN with in-kernel dequant.
+
+    xs [M, D]; w1q int8 [E, D, 2F] (int4: [E, D//2, 2F]); w2q int8
+    [E, F, D] (int4: [E, F, D//2]); s1 f32 [E, 2, F]; s2 f32 [E, F];
+    tile_expert/tile_valid [n_tiles] i32 -> [M, D].
+    """
+    if dtype not in ("int8", "int4"):
+        raise ValueError(f"unsupported expert dtype {dtype!r}")
+    packed = dtype == "int4"
+    m, d = xs.shape
+    e, f = w2q.shape[0], w2q.shape[1]
+    dp = d // 2 if packed else d
+    assert w1q.shape == (e, dp, 2 * f), (w1q.shape, (e, dp, 2 * f))
+    assert w2q.shape == (e, f, dp), (w2q.shape, (e, f, dp))
+    assert s1.shape == (e, 2, f) and s2.shape == (e, f), (s1.shape, s2.shape)
+    assert not packed or d % 2 == 0, d
+    assert m % block_m == 0, (m, block_m)
+    n_tiles = m // block_m
+    assert tile_expert.shape == (n_tiles,), (tile_expert.shape, n_tiles)
+    bf = min(block_f, f)
+    while f % bf:
+        bf //= 2
+    bf = max(bf, 1)
+    n_f = f // bf
+
+    w1v = w1q.reshape(e, dp, 2, f)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles, n_f),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, fi, te, tv: (i, 0)),
+            pl.BlockSpec((1, dp, 2, bf),
+                         lambda i, fi, te, tv: (te[i], 0, 0, fi)),
+            pl.BlockSpec((1, bf, dp), lambda i, fi, te, tv: (te[i], fi, 0)),
+            pl.BlockSpec((1, 2, bf), lambda i, fi, te, tv: (te[i], 0, fi)),
+            pl.BlockSpec((1, bf), lambda i, fi, te, tv: (te[i], fi)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i, fi, te, tv: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, n_f_steps=n_f, packed=packed),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), xs.dtype),
+        interpret=interpret,
+    )(tile_expert, tile_valid, xs, w1v, w2q, s1.astype(jnp.float32),
+      s2.astype(jnp.float32))

@@ -43,7 +43,7 @@ def moe_gmm(xs, w1, w2, tile_expert, tile_valid, *, block_m: int,
 
 
 @jax.jit
-def moe_decode(x, w1, w2, idx, weights):
+def moe_decode(x, w1, w2, idx, weights, pred_idx=None):
     """Fused routed-expert decode MoE: x [B, D], w1 [E, D, 2F], w2 [E, F, D],
     idx [B, k] i32, weights [B, k] -> [B, D].
 
@@ -54,12 +54,53 @@ def moe_decode(x, w1, w2, idx, weights):
     per (token, slot, f-step) cell, while the gather is one fused XLA op.
     The kernel body itself is validated in interpret mode by
     tests/test_moe_decode.py.
+
+    ``pred_idx`` (router lookahead) stages the fallback's gathers on ids
+    predicted one layer ahead, hit-selected against the true ids -- a
+    numeric no-op that reorders dependencies.  The kernel path ignores it:
+    its DMA is driven by the true scalar-prefetched ids.
     """
     from repro.kernels.moe_decode import moe_decode_pallas, \
         moe_decode_routed_jnp
     if _interpret():
-        return moe_decode_routed_jnp(x, w1, w2, idx, weights)
+        return moe_decode_routed_jnp(x, w1, w2, idx, weights, pred_idx)
     return moe_decode_pallas(x, w1, w2, idx, weights, interpret=False)
+
+
+@partial(jax.jit, static_argnames=("dtype", "block_f"))
+def moe_decode_quant(x, w1q, w2q, s1, s2, idx, weights, pred_idx=None, *,
+                     dtype: str, block_f: int = 256):
+    """Quantized fused routed-expert decode MoE (in-kernel dequant).
+
+    x [B, D]; w1q/w2q int8 tiles (int4: packed along D); s1 [E, 2, F] /
+    s2 [E, F] f32 scale rows -> [B, D].  Backend selection mirrors
+    ``moe_decode``: the Mosaic kernel dequantizes tiles in VMEM on TPU;
+    off-TPU the dequant-after-gather jnp path runs the same math (and it
+    is the only consumer of ``pred_idx``).
+    """
+    from repro.kernels.moe_decode import moe_decode_quant_pallas, \
+        moe_decode_routed_quant_jnp
+    if _interpret():
+        return moe_decode_routed_quant_jnp(x, w1q, w2q, s1, s2, idx,
+                                           weights, dtype=dtype,
+                                           pred_idx=pred_idx)
+    return moe_decode_quant_pallas(x, w1q, w2q, s1, s2, idx, weights,
+                                   dtype=dtype, block_f=block_f,
+                                   interpret=False)
+
+
+@partial(jax.jit, static_argnames=("dtype", "block_m", "block_f"))
+def moe_gmm_quant(xs, w1q, w2q, s1, s2, tile_expert, tile_valid, *,
+                  dtype: str, block_m: int, block_f: int = 256):
+    """Quantized ragged grouped SwiGLU over a tile-aligned sorted buffer.
+
+    Same tile walk as ``moe_gmm`` with int8-stored expert tiles and their
+    scale rows DMA'd by the same prefetched ``tile_expert`` map.
+    """
+    from repro.kernels.moe_gmm import moe_gmm_quant_pallas
+    return moe_gmm_quant_pallas(xs, w1q, w2q, s1, s2, tile_expert,
+                                tile_valid, dtype=dtype, block_m=block_m,
+                                block_f=block_f, interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("window", "block_q", "block_k"))

@@ -69,6 +69,55 @@ def moe_decode_ref(x, w1, w2, idx, weights):
     return out
 
 
+def _unpack_int4_np(packed, axis: int):
+    """numpy inverse of the blocked-halves int4 packing
+    (``models/moe/params.py``): concat(low nibbles, high nibbles)."""
+    p32 = np.asarray(packed).astype(np.int32)
+    lo = ((p32 & 0xF) ^ 8) - 8
+    hi = p32 >> 4
+    return np.concatenate([lo, hi], axis=axis)
+
+
+def dequantize_experts_np(w1q, w2q, s1, s2, dtype):
+    """numpy/f64 dequant of the quantized expert format -- independent of
+    the jnp implementation in ``models/moe/params.py`` on purpose (an
+    oracle that reuses the code under test proves nothing).
+
+    w1q [E, D(p), 2F] int8, w2q [E, F, D(p)] int8, s1 [E, 2, F] f32,
+    s2 [E, F] f32 -> (w1 [E, D, 2F], w2 [E, F, D]) f64.
+    """
+    q1 = np.asarray(w1q)
+    q2 = np.asarray(w2q)
+    e, dp, twof = q1.shape
+    f = twof // 2
+    q1 = q1.reshape(e, dp, 2, f)
+    if dtype == "int4":
+        q1 = _unpack_int4_np(q1, axis=1)
+        q2 = _unpack_int4_np(q2, axis=2)
+    elif dtype != "int8":
+        raise ValueError(f"unsupported expert dtype {dtype!r}")
+    d = q1.shape[1]
+    s1_ = np.asarray(s1, np.float64)
+    s2_ = np.asarray(s2, np.float64)
+    w1 = (q1.astype(np.float64) * s1_[:, None]).reshape(e, d, twof)
+    w2 = q2.astype(np.float64) * s2_[..., None]
+    return w1, w2
+
+
+def moe_decode_quant_ref(x, w1q, w2q, s1, s2, idx, weights, *, dtype):
+    """Quantized routed-expert decode MoE, numpy float64 dequant oracle.
+
+    Dequantizes exactly (integer values times f64 scales) and runs the
+    f64 reference -- the ground truth both quantized kernels and the
+    quantized jnp fallback are pinned against.  The production paths
+    instead fold s2 into ``h`` before the w2 dot; that reassociation is
+    exact in real arithmetic, so any f32-rounding difference it causes
+    must stay inside the harness tolerance.
+    """
+    w1, w2 = dequantize_experts_np(w1q, w2q, s1, s2, dtype)
+    return moe_decode_ref(x, w1, w2, idx, weights)
+
+
 def flash_decode_ref(q, k, v, pos, cur_pos, *, window=None):
     """One-token decode attention over a position-masked cache.
 

@@ -77,6 +77,15 @@ def main() -> int:
                     help="decode steps run MoE through the fused "
                          "routed-expert path (no sort plan) instead of the "
                          "gmm dispatch")
+    ap.add_argument("--expert-dtype", choices=["bf16", "int8", "int4"],
+                    default="bf16",
+                    help="storage dtype for routed expert tiles; int8/int4 "
+                         "quantize at load and dequantize in-kernel "
+                         "(gmm/decode MoE impls only)")
+    ap.add_argument("--router-lookahead", action="store_true",
+                    help="decode steps predict each layer's expert ids from "
+                         "the previous layer's hidden state and stage "
+                         "weight loads early (numerically exact)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="per-request top-k sampling cap (0 = no cap; only "
                          "matters with a temperature > 0)")
@@ -106,9 +115,12 @@ def main() -> int:
                  preemption=args.preemption,
                  use_kernel=args.use_kernel or None,
                  use_moe_decode=args.use_moe_decode or None,
+                 expert_dtype=args.expert_dtype,
+                 router_lookahead=args.router_lookahead or None,
                  scheduler=args.scheduler)
     print(f"arch={cfg.name} baseline top-k={cfg.moe_top_k or 'n/a'} "
-          f"layout={eng.kv.layout} chunk={eng.prefill_chunk or 'whole'}")
+          f"layout={eng.kv.layout} chunk={eng.prefill_chunk or 'whole'} "
+          f"experts={args.expert_dtype}")
     eng.serve(reqs)
     tput = _report("baseline", eng)
 

@@ -89,8 +89,16 @@ def apply_block(
     opts: ModelOpts = DEFAULT_OPTS,
     block_tables=None,
     kernel_blocks: Optional[int] = None,
+    lookahead_h2=None,
 ):
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss, h2).
+
+    ``h2`` is this block's pre-FFN normed hidden (None for mamba blocks).
+    ``apply_stack`` carries it one layer forward when router lookahead is
+    on, and ``lookahead_h2`` is that carry: the *previous* layer's h2, from
+    which this block predicts its top-k expert ids before its own
+    attention output exists (DESIGN.md §7).
+    """
     if mesh is not None and opts.act_constraint:
         # optionally pin activations to batch-over-data at block boundaries
         # (a sharding-layout lever studied in EXPERIMENTS.md §Perf; default
@@ -108,7 +116,17 @@ def apply_block(
         h, new_cache = ssm_mod.mamba_forward(
             params["mixer"], cfg, apply_norm(params["norm1"], cfg, x),
             mode=mode, cache=cache)
-        return x + h, new_cache, aux
+        return x + h, new_cache, aux, None
+
+    # Router lookahead: the prediction depends only on the scan carry (the
+    # previous layer's pre-FFN hidden), so issuing it *before* this
+    # layer's attention makes the staged expert-weight gathers schedulable
+    # under the attention compute -- the whole point of the lookahead.
+    pred_idx = None
+    if lookahead_h2 is not None and spec.kind == "attn_moe":
+        d = lookahead_h2.shape[-1]
+        pred_idx = moe_mod.route_lookahead(
+            params["moe"], cfg, lookahead_h2.reshape(-1, d), spec.moe_top_k)
 
     attn_kw = {"block_tables": block_tables,
                "use_paged_kernel": opts.use_paged_kernel,
@@ -136,11 +154,13 @@ def apply_block(
                              use_kernel=opts.use_moe_kernel,
                              a2a_chunks=opts.a2a_chunks,
                              decode_kernel=(opts.use_moe_decode_kernel
-                                            and mode == "decode"))
+                                            and mode == "decode"),
+                             expert_dtype=opts.expert_dtype,
+                             pred_idx=pred_idx)
         x = x + y
     else:
         x = x + mlp(params["mlp"], h2)
-    return x, new_cache, aux
+    return x, new_cache, aux, h2
 
 
 # --------------------------------------------------------------------------- #
@@ -209,35 +229,56 @@ def apply_stack(
     total_aux = jnp.zeros((), jnp.float32)
     new_caches = []
     use_cache = caches is not None
+    lookahead = opts.router_lookahead and mode == "decode"
+    # Router lookahead carry: layer i-1's pre-FFN hidden, from which layer
+    # i predicts its expert ids before its own attention runs.  Zeros feed
+    # the first layer -- its staged loads just miss, which never changes
+    # outputs (hit-select against the true ids).
+    h2_prev = jnp.zeros_like(x) if lookahead else None
 
     for gi, g in enumerate(groups):
         gparams = params["groups"][gi]
         gcache = caches[gi] if use_cache else None
         if g.spec.kind == "shared_attn":
             gparams = params["shared_attn"]
+        gl = lookahead and g.spec.kind != "mamba"
 
-        def one_layer(p_layer, xx, c_layer, spec=g.spec):
+        def one_layer(p_layer, xx, c_layer, h2_in=None, spec=g.spec):
             fn = partial(apply_block, cfg=cfg, spec=spec, positions=positions,
                          mode=mode, mesh=mesh, opts=opts,
                          block_tables=block_tables,
                          kernel_blocks=kernel_blocks)
             if opts.remat != "none" and mode == "train":
                 fn = _remat(fn, opts)
-            return fn(p_layer, x=xx, cache=c_layer)
+            return fn(p_layer, x=xx, cache=c_layer, lookahead_h2=h2_in)
 
         if g.count == 1:
-            x, nc, aux = one_layer(gparams, x, gcache)
+            x, nc, aux, h2 = one_layer(gparams, x, gcache,
+                                       h2_prev if gl else None)
+            if gl:
+                h2_prev = h2
             new_caches.append(nc)
             total_aux = total_aux + aux
         elif use_cache:
-            def body_c(carry, layer_in, fn=one_layer):
-                p_layer, c_layer = layer_in
-                xx, c_out, aux = fn(p_layer, carry, c_layer)
-                return xx, (c_out, aux)
+            if gl:
+                def body_cl(carry, layer_in, fn=one_layer):
+                    p_layer, c_layer = layer_in
+                    xx, h2p = carry
+                    xx, c_out, aux, h2 = fn(p_layer, xx, c_layer, h2p)
+                    return (xx, h2), (c_out, aux)
 
-            x, (c_stack, auxs) = jax.lax.scan(
-                body_c, x, (gparams, gcache),
-                unroll=True if opts.scan_unroll else 1)
+                (x, h2_prev), (c_stack, auxs) = jax.lax.scan(
+                    body_cl, (x, h2_prev), (gparams, gcache),
+                    unroll=True if opts.scan_unroll else 1)
+            else:
+                def body_c(carry, layer_in, fn=one_layer):
+                    p_layer, c_layer = layer_in
+                    xx, c_out, aux, _ = fn(p_layer, carry, c_layer)
+                    return xx, (c_out, aux)
+
+                x, (c_stack, auxs) = jax.lax.scan(
+                    body_c, x, (gparams, gcache),
+                    unroll=True if opts.scan_unroll else 1)
             new_caches.append(c_stack)
             total_aux = total_aux + jnp.sum(auxs)
         elif (opts.remat_chunk > 1 and mode == "train"
@@ -251,9 +292,10 @@ def apply_stack(
 
             def chunk_body(carry, pchunk, spec=g.spec):
                 def inner(c2, p_layer):
-                    xx, _, aux = apply_block(p_layer, cfg, spec, c2, positions,
-                                             mode=mode, cache=None, mesh=mesh,
-                                             opts=opts)
+                    xx, _, aux, _ = apply_block(p_layer, cfg, spec, c2,
+                                                positions, mode=mode,
+                                                cache=None, mesh=mesh,
+                                                opts=opts)
                     return xx, aux
                 xx, auxs = jax.lax.scan(inner, carry, pchunk)
                 return xx, jnp.sum(auxs)
@@ -268,7 +310,7 @@ def apply_stack(
                 rest = jax.tree.map(lambda a: a[n_main:], gparams)
 
                 def body_r(carry, p_layer, fn=one_layer):
-                    xx, _, aux = fn(p_layer, carry, None)
+                    xx, _, aux, _ = fn(p_layer, carry, None)
                     return xx, aux
 
                 x, auxs = jax.lax.scan(body_r, x, rest,
@@ -277,7 +319,7 @@ def apply_stack(
             new_caches.append(None)
         else:
             def body_nc(carry, p_layer, fn=one_layer):
-                xx, _, aux = fn(p_layer, carry, None)
+                xx, _, aux, _ = fn(p_layer, carry, None)
                 return xx, aux
 
             x, auxs = jax.lax.scan(body_nc, x, gparams,

@@ -21,7 +21,10 @@ from repro.models.moe.compute import (  # noqa: F401
     add_shared,
     expert_ffn,
     grouped_ffn,
+    grouped_ffn_quant,
+    quant_leaves,
     routed_ffn,
+    routed_ffn_quant,
 )
 from repro.models.moe.decode import moe_decode  # noqa: F401
 from repro.models.moe.dense import moe_dense  # noqa: F401
@@ -43,7 +46,15 @@ from repro.models.moe.ep import (  # noqa: F401
     moe_ep_psum_local,
 )
 from repro.models.moe.gmm import moe_gmm  # noqa: F401
-from repro.models.moe.params import init_moe  # noqa: F401
+from repro.models.moe.params import (  # noqa: F401
+    QUANT_DTYPES,
+    dequantize_experts,
+    init_moe,
+    quantize_expert_params,
+    quantize_experts,
+    quantize_moe_layer,
+    unpack_int4,
+)
 from repro.models.moe.registry import (  # noqa: F401
     DECODE_TOKEN_THRESHOLD,
     available_impls,
@@ -51,7 +62,11 @@ from repro.models.moe.registry import (  # noqa: F401
     register_impl,
     resolve_impl,
 )
-from repro.models.moe.router import capacity, route  # noqa: F401
+from repro.models.moe.router import (  # noqa: F401
+    capacity,
+    route,
+    route_lookahead,
+)
 
 # back-compat alias for callers of the pre-package private helper
 _add_shared = add_shared

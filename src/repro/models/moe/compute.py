@@ -53,7 +53,8 @@ def grouped_ffn(w1, w2, xs, plan: SortPlan, use_kernel: bool = False):
     return yt.reshape(m, d)
 
 
-def routed_ffn(w1, w2, x2d, idx, weights, use_kernel: bool = False):
+def routed_ffn(w1, w2, x2d, idx, weights, use_kernel: bool = False,
+               pred_idx=None):
     """x2d [T, D] + routing (idx, weights) [T, k] -> combined [T, D].
 
     The routed per-token layout: no token movement at all -- each token's k
@@ -62,12 +63,77 @@ def routed_ffn(w1, w2, x2d, idx, weights, use_kernel: bool = False):
     ``sort_combine``).  Kernel path: the fused decode kernel DMAs each
     routed expert's weight tiles via scalar prefetch (jnp gather fallback
     off-TPU).  jnp path: the same gather-and-contract spelled inline.
+    ``pred_idx`` [T, k] (router lookahead) stages the gather paths' weight
+    loads on ids predicted one layer ahead -- numerically a no-op.
     """
     if use_kernel:
         from repro.kernels import ops as kops
-        return kops.moe_decode(x2d, w1, w2, idx, weights)
+        return kops.moe_decode(x2d, w1, w2, idx, weights, pred_idx)
     from repro.kernels.moe_decode import moe_decode_routed_jnp
-    return moe_decode_routed_jnp(x2d, w1, w2, idx, weights)
+    return moe_decode_routed_jnp(x2d, w1, w2, idx, weights, pred_idx)
+
+
+def quant_leaves(params: Dict, expert_dtype: str):
+    """(w1q, w2q, s1, s2) from a quantized MoE layer dict, with a clear
+    error when the params were never quantized (the opts/engine contract
+    is quantize-at-load; hitting raw weights here is a wiring bug)."""
+    if "w1_scale" not in params:
+        raise ValueError(
+            f"expert_dtype={expert_dtype!r} needs quantized params: run "
+            "models.moe.quantize_expert_params (Engine(expert_dtype=...) "
+            "does this at load)")
+    return (params["w1"], params["w2"], params["w1_scale"],
+            params["w2_scale"])
+
+
+def routed_ffn_quant(params: Dict, x2d, idx, weights,
+                     use_kernel: bool = False, *, expert_dtype: str,
+                     pred_idx=None):
+    """``routed_ffn`` over int8-stored expert tiles (in-kernel dequant on
+    the kernel path, dequant-after-gather on the jnp path)."""
+    w1q, w2q, s1, s2 = quant_leaves(params, expert_dtype)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.moe_decode_quant(x2d, w1q, w2q, s1, s2, idx, weights,
+                                     pred_idx, dtype=expert_dtype)
+    from repro.kernels.moe_decode import moe_decode_routed_quant_jnp
+    return moe_decode_routed_quant_jnp(x2d, w1q, w2q, s1, s2, idx, weights,
+                                       dtype=expert_dtype,
+                                       pred_idx=pred_idx)
+
+
+def grouped_ffn_quant(params: Dict, xs, plan: SortPlan,
+                      use_kernel: bool = False, *, expert_dtype: str):
+    """``grouped_ffn`` over int8-stored expert tiles.
+
+    Kernel path: the quantized ragged kernel dequantizes tiles in VMEM
+    (scale rows ride the same ``tile_expert`` prefetch).  jnp path: the
+    per-tile weight gather moves int8 (int4: packed) copies and the scale
+    multiplies sit where the kernel puts them -- s1 after the w1 dot, s2
+    folded into h before the w2 dot.
+    """
+    w1q, w2q, s1, s2 = quant_leaves(params, expert_dtype)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.moe_gmm_quant(xs, w1q, w2q, s1, s2, plan.tile_expert,
+                                  plan.tile_valid, dtype=expert_dtype,
+                                  block_m=plan.block_m)
+    m, d = xs.shape
+    f = w2q.shape[1]
+    w1g = w1q[plan.tile_expert]                   # [n_tiles, D(p), 2F] int8
+    w2g = w2q[plan.tile_expert]                   # [n_tiles, F, D(p)] int8
+    s1g = s1[plan.tile_expert]                    # [n_tiles, 2, F] f32
+    s2g = s2[plan.tile_expert]                    # [n_tiles, F] f32
+    if expert_dtype == "int4":
+        from repro.models.moe.params import unpack_int4
+        w1g = unpack_int4(w1g, axis=1)
+        w2g = unpack_int4(w2g, axis=2)
+    xt = xs.reshape(-1, plan.block_m, d).astype(jnp.float32)
+    h = jnp.einsum("tbd,tdf->tbf", xt, w1g.astype(jnp.float32))
+    h = h.reshape(h.shape[0], plan.block_m, 2, f) * s1g[:, None]
+    h = jax.nn.silu(h[:, :, 0, :]) * h[:, :, 1, :] * s2g[:, None]
+    yt = jnp.einsum("tbf,tfd->tbd", h, w2g.astype(jnp.float32))
+    return yt.reshape(m, d).astype(xs.dtype)
 
 
 def add_shared(params: Dict, cfg: ModelConfig, x2d, y):

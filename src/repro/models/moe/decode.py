@@ -23,14 +23,28 @@ from typing import Dict, Tuple
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.moe.compute import add_shared, routed_ffn
+from repro.models.moe.compute import add_shared, routed_ffn, routed_ffn_quant
 from repro.models.moe.router import route
 
 
 def moe_decode(params: Dict, cfg: ModelConfig, x2d, top_k: int,
-               use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x2d [T, D] -> (y2d [T, D], aux_loss).  Dropless; decode-shaped T."""
+               use_kernel: bool = False, *, expert_dtype: str = "bf16",
+               pred_idx=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x2d [T, D] -> (y2d [T, D], aux_loss).  Dropless; decode-shaped T.
+
+    ``expert_dtype`` != "bf16" reads int8-stored expert tiles (plus their
+    scale rows) quantized at load by ``quantize_expert_params``; the
+    router runs full precision either way.  ``pred_idx`` [T, k] is the
+    router-lookahead hint: gather-path weight loads stage on it and
+    hit-select against the true ids (DESIGN.md §7) -- outputs never
+    depend on it.
+    """
     weights, idx, aux = route(params, cfg, x2d, top_k)
-    y = routed_ffn(params["w1"], params["w2"], x2d, idx, weights, use_kernel)
+    if expert_dtype == "bf16":
+        y = routed_ffn(params["w1"], params["w2"], x2d, idx, weights,
+                       use_kernel, pred_idx=pred_idx)
+    else:
+        y = routed_ffn_quant(params, x2d, idx, weights, use_kernel,
+                             expert_dtype=expert_dtype, pred_idx=pred_idx)
     y = add_shared(params, cfg, x2d, y.astype(x2d.dtype))
     return y, aux

@@ -15,7 +15,8 @@ from typing import Dict, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.moe.compute import add_shared, grouped_ffn
+from repro.models.moe.compute import add_shared, grouped_ffn, \
+    grouped_ffn_quant
 from repro.models.moe.dispatch import default_block_m, make_sort_plan, \
     sort_combine, sort_dispatch
 from repro.models.moe.router import route
@@ -23,8 +24,14 @@ from repro.models.moe.router import route
 
 def moe_gmm(params: Dict, cfg: ModelConfig, x2d, top_k: int,
             use_kernel: bool = False, block_m: Optional[int] = None,
+            *, expert_dtype: str = "bf16",
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x2d [T, D] -> (y2d [T, D], aux_loss).  Dropless for any T, k."""
+    """x2d [T, D] -> (y2d [T, D], aux_loss).  Dropless for any T, k.
+
+    ``expert_dtype`` != "bf16" runs the grouped FFN over int8-stored
+    expert tiles (``grouped_ffn_quant``); routing and the sort plan are
+    identical either way.
+    """
     t, _ = x2d.shape
     weights, idx, aux = route(params, cfg, x2d, top_k)
     # kernel path keeps the Mosaic sublane floor (8); the jnp path may
@@ -32,7 +39,11 @@ def moe_gmm(params: Dict, cfg: ModelConfig, x2d, top_k: int,
     bm = block_m or default_block_m(t * top_k, floor=8 if use_kernel else 1)
     plan = make_sort_plan(idx, cfg.num_experts, bm)
     xs = sort_dispatch(x2d, plan, top_k)                          # [M, D]
-    ys = grouped_ffn(params["w1"], params["w2"], xs, plan, use_kernel)
+    if expert_dtype == "bf16":
+        ys = grouped_ffn(params["w1"], params["w2"], xs, plan, use_kernel)
+    else:
+        ys = grouped_ffn_quant(params, xs, plan, use_kernel,
+                               expert_dtype=expert_dtype)
     y = sort_combine(ys, weights, plan).astype(x2d.dtype)
     y = add_shared(params, cfg, x2d, y)
     return y, aux

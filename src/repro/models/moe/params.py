@@ -1,14 +1,49 @@
-"""Parameter init for one MoE layer (shared by every dispatch impl)."""
+"""Parameter init + quantized storage for one MoE layer.
+
+``init_moe`` is shared by every dispatch impl.  ``quantize_experts`` /
+``dequantize_experts`` define the quantized expert-weight format the
+inference paths consume (DESIGN.md §7): symmetric per-(expert, f-channel)
+f32 scales whose layout slices along the same f-tile grid axis as the
+weight tiles themselves, so the decode kernel's scalar-prefetched routed
+ids index scale rows and quantized tiles with one BlockSpec scheme.
+
+  w1 [.., E, D, 2F]  scales over the contraction dim D, one per (gate|up,
+                     f-column): ``w1_scale [.., E, 2, F]`` -- applied
+                     *after* the x@w1 dot (scale constant along D).
+  w2 [.., E, F, D]   scales over the output dim D would not slice with
+                     the f-tile walk, so they sit per f-*row* instead:
+                     ``w2_scale [.., E, F]`` -- folded into the hidden
+                     activation *before* the h@w2 dot (scale varies along
+                     the contraction dim F, so it cannot move past it).
+
+``int4`` packs two nibbles per int8 byte along D in blocked halves: byte
+``i`` holds element ``i`` (low nibble) and ``i + D//2`` (high nibble), so
+unpacking is a concat of two full-width slices -- no interleave shuffle in
+the kernel.  D is the contraction dim of w1 (the input splits into
+contiguous halves, two dots sum) and the output dim of w2 (two dots
+concat).  Leading dims are generic: stacked layer groups ``[L, E, ...]``
+quantize in one call, so plan views regroup the scale leaves for free.
+"""
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.common import dense_init, param_dtype, split_keys
 from repro.models.mlp import init_mlp
+
+#: quantized expert-weight dtypes ("bf16" everywhere else means "native":
+#: whatever param_dtype(cfg) stored -- no quantization)
+QUANT_DTYPES: Tuple[str, ...] = ("int8", "int4")
+
+#: symmetric quantization maxima: int8 uses the full signed range; int4
+#: values live in [-8, 7] but symmetric round-trip needs |q| <= 7
+_QMAX = {"int8": 127, "int4": 7}
+
+_EPS = 1e-12   # zero-channel guard: scale 0 would divide 0/0
 
 
 def init_moe(key, cfg: ModelConfig) -> Dict:
@@ -24,3 +59,130 @@ def init_moe(key, cfg: ModelConfig) -> Dict:
         sf = cfg.shared_expert_d_ff or cfg.moe_d_ff * cfg.num_shared_experts
         p["shared"] = init_mlp(ks[3], cfg, d_ff=sf)
     return p
+
+
+# --------------------------------------------------------------------------- #
+# Quantized expert-weight format
+# --------------------------------------------------------------------------- #
+
+
+def _pack_int4(q, axis: int):
+    """Pack int values in [-8, 7] two-per-byte along ``axis`` (blocked
+    halves: byte i = elem i | elem i + n//2 << 4)."""
+    n = q.shape[axis]
+    assert n % 2 == 0, f"int4 packing needs an even dim, got {n}"
+    lo = jnp.take(q, jnp.arange(n // 2), axis=axis).astype(jnp.int32)
+    hi = jnp.take(q, jnp.arange(n // 2, n), axis=axis).astype(jnp.int32)
+    return ((hi << 4) | (lo & 0xF)).astype(jnp.int8)
+
+
+def unpack_int4(packed, axis: int):
+    """Inverse of ``_pack_int4`` -> int32 values in [-8, 7].
+
+    The low nibble sign-extends via the ``(x ^ 8) - 8`` trick; the high
+    nibble via int32 arithmetic right-shift.  Blocked-halves layout means
+    the unpacked array is just ``concat([lo, hi], axis)``.
+    """
+    p32 = packed.astype(jnp.int32)
+    lo = ((p32 & 0xF) ^ 8) - 8
+    hi = p32 >> 4
+    return jnp.concatenate([lo, hi], axis=axis)
+
+
+def quantize_experts(w1, w2, dtype: str):
+    """(w1 [.., E, D, 2F], w2 [.., E, F, D]) -> (w1q, w2q, s1, s2).
+
+    ``w1q`` int8 [.., E, D, 2F] (int4: [.., E, D//2, 2F] packed along D),
+    ``w2q`` int8 [.., E, F, D] (int4: [.., E, F, D//2] packed along D),
+    ``s1`` f32 [.., E, 2, F] per-(gate|up, f-column) scales,
+    ``s2`` f32 [.., E, F] per-f-row scales.
+    """
+    if dtype not in QUANT_DTYPES:
+        raise ValueError(f"expert dtype {dtype!r} not in {QUANT_DTYPES}")
+    qmax = _QMAX[dtype]
+    *lead, d, twof = w1.shape
+    f = twof // 2
+    assert w2.shape[-2:] == (f, d), (w1.shape, w2.shape)
+
+    w1v = w1.reshape(*lead, d, 2, f).astype(jnp.float32)
+    s1 = jnp.maximum(jnp.max(jnp.abs(w1v), axis=-3), _EPS) / qmax
+    q1 = jnp.clip(jnp.round(w1v / s1[..., None, :, :]), -qmax, qmax)
+
+    w2f = w2.astype(jnp.float32)
+    s2 = jnp.maximum(jnp.max(jnp.abs(w2f), axis=-1), _EPS) / qmax
+    q2 = jnp.clip(jnp.round(w2f / s2[..., None]), -qmax, qmax)
+
+    if dtype == "int4":
+        w1q = _pack_int4(q1, axis=len(lead)).reshape(*lead, d // 2, twof)
+        w2q = _pack_int4(q2, axis=len(lead) + 1)
+    else:
+        w1q = q1.astype(jnp.int8).reshape(*lead, d, twof)
+        w2q = q2.astype(jnp.int8)
+    return w1q, w2q, s1, s2
+
+
+def dequantize_experts(w1q, w2q, s1, s2, dtype: str,
+                       out_dtype=jnp.float32):
+    """Inverse of ``quantize_experts`` (up to rounding): full-precision
+    (w1 [.., E, D, 2F], w2 [.., E, F, D])."""
+    if dtype not in QUANT_DTYPES:
+        raise ValueError(f"expert dtype {dtype!r} not in {QUANT_DTYPES}")
+    *lead, dp, twof = w1q.shape
+    f = twof // 2
+    q1 = w1q.reshape(*lead, dp, 2, f)
+    if dtype == "int4":
+        q1 = unpack_int4(q1, axis=len(lead))
+        w2v = unpack_int4(w2q, axis=len(lead) + 1)
+    else:
+        w2v = w2q
+    d = q1.shape[len(lead)]
+    w1 = (q1.astype(jnp.float32) * s1[..., None, :, :]).reshape(*lead, d,
+                                                                twof)
+    w2 = w2v.astype(jnp.float32) * s2[..., None]
+    return w1.astype(out_dtype), w2.astype(out_dtype)
+
+
+def quantize_moe_layer(p: Dict, dtype: str) -> Dict:
+    """One MoE layer dict -> same dict with int8-stored experts.
+
+    ``w1``/``w2`` keep their keys (plan regrouping and per-layer iteration
+    are generic pytree ops, so quantized leaves and their new
+    ``w1_scale``/``w2_scale`` siblings ride along untouched); the router
+    and any shared expert stay full precision -- the router because every
+    routing decision flows from it, the shared expert because it is dense
+    (always-on) and out of scope for the routed-tile DMA story.
+    """
+    if "w1_scale" in p:
+        raise ValueError("moe layer is already quantized")
+    w1q, w2q, s1, s2 = quantize_experts(p["w1"], p["w2"], dtype)
+    out = dict(p)
+    out["w1"], out["w2"] = w1q, w2q
+    out["w1_scale"], out["w2_scale"] = s1, s2
+    return out
+
+
+def quantize_expert_params(params: Dict, cfg: ModelConfig,
+                           dtype: str) -> Dict:
+    """Whole-model quantize-at-load: every MoE layer's experts -> ``dtype``.
+
+    Walks the stacked layer groups (``group_pattern``); stacked groups
+    quantize through their leading ``[count]`` dim in one call.  Returns a
+    new params pytree sharing every non-expert leaf with the input -- the
+    caller can drop the full-precision tree and serving never holds both
+    expert copies.
+    """
+    if dtype not in QUANT_DTYPES:
+        raise ValueError(f"expert dtype {dtype!r} not in {QUANT_DTYPES}")
+    from repro.models.blocks import group_pattern
+    groups = group_pattern(cfg.pattern())
+    new_groups = []
+    for g, gp in zip(groups, params["stack"]["groups"]):
+        if g.spec.kind == "attn_moe":
+            gp = dict(gp)
+            gp["moe"] = quantize_moe_layer(gp["moe"], dtype)
+        new_groups.append(gp)
+    stack = dict(params["stack"])
+    stack["groups"] = new_groups
+    out = dict(params)
+    out["stack"] = stack
+    return out

@@ -16,9 +16,15 @@ has the full matrix):
   ``ep_psum``  expert parallelism via psum (decode-shaped batches).
 
 Impls registered here take ``(params, cfg, x2d, top_k, *, mesh, use_kernel,
-a2a_chunks)`` and return ``(y2d, aux)``.  New strategies (EP over the sorted
-layout, multi-plan serving) register with ``register_impl`` without touching
-model code.
+a2a_chunks, expert_dtype, pred_idx)`` and return ``(y2d, aux)``.  New
+strategies (EP over the sorted layout, multi-plan serving) register with
+``register_impl`` without touching model code.
+
+Quantized expert tiles (``expert_dtype`` in ``params.QUANT_DTYPES``) are
+served by the two production inference impls only -- ``gmm`` and
+``decode``; the capacity family and EP reference paths stay bf16 and raise
+rather than silently reading int8 tiles as weights.  ``pred_idx`` (router
+lookahead) is only meaningful on the fused decode path.
 """
 
 from __future__ import annotations
@@ -67,51 +73,69 @@ def available_impls() -> Tuple[str, ...]:
     return tuple(sorted(_IMPLS))
 
 
+def _require_bf16(impl: str, expert_dtype: str):
+    if expert_dtype != "bf16":
+        raise ValueError(
+            f"moe impl {impl!r} serves bf16 expert weights only; "
+            f"expert_dtype={expert_dtype!r} requires 'gmm' or 'decode'")
+
+
 @register_impl("dense")
 def _dense(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-           a2a_chunks=1):
-    del mesh, a2a_chunks
+           a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
+    del mesh, a2a_chunks, pred_idx
+    _require_bf16("dense", expert_dtype)
     return moe_dense(params, cfg, x2d, top_k, use_kernel)
 
 
 @register_impl("gmm")
 def _gmm(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-         a2a_chunks=1):
-    del mesh, a2a_chunks  # jnp/Pallas body; GSPMD partitions it under jit
-    return moe_gmm(params, cfg, x2d, top_k, use_kernel)
+         a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
+    del mesh, a2a_chunks, pred_idx  # jnp/Pallas body; GSPMD partitions it
+    return moe_gmm(params, cfg, x2d, top_k, use_kernel,
+                   expert_dtype=expert_dtype)
 
 
 @register_impl("decode")
 def _decode(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-            a2a_chunks=1):
+            a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
     del mesh, a2a_chunks  # single-device body; GSPMD partitions under jit
-    return moe_decode(params, cfg, x2d, top_k, use_kernel)
+    return moe_decode(params, cfg, x2d, top_k, use_kernel,
+                      expert_dtype=expert_dtype, pred_idx=pred_idx)
 
 
 @register_impl("ep_a2a", needs_mesh=True)
 def _ep_a2a(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-            a2a_chunks=1):
+            a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
+    del pred_idx
+    _require_bf16("ep_a2a", expert_dtype)
     return moe_ep_a2a(params, cfg, x2d, top_k, mesh=mesh,
                       use_kernel=use_kernel, a2a_chunks=a2a_chunks)
 
 
 @register_impl("ep_psum", needs_mesh=True)
 def _ep_psum(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-             a2a_chunks=1):
-    del a2a_chunks
+             a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
+    del a2a_chunks, pred_idx
+    _require_bf16("ep_psum", expert_dtype)
     return moe_ep_psum(params, cfg, x2d, top_k, mesh=mesh,
                        use_kernel=use_kernel)
 
 
 def moe(params: Dict, cfg: ModelConfig, x, top_k: int, *,
         impl: Optional[str] = None, mesh=None, use_kernel: bool = False,
-        a2a_chunks: int = 1, decode_kernel: bool = False):
+        a2a_chunks: int = 1, decode_kernel: bool = False,
+        expert_dtype: str = "bf16", pred_idx=None):
     """x [B, S, D] -> (y [B, S, D], aux_loss scalar).
 
     ``impl`` overrides ``cfg.moe_impl``; mesh-requiring impls fall back to
     ``dense`` when no mesh is given (single-device runs of EP configs).
     ``decode_kernel=True`` opts decode-shaped gmm calls
     (``T <= DECODE_TOKEN_THRESHOLD``) into the fused routed-expert path.
+    ``expert_dtype`` != "bf16" expects params quantized at load
+    (``quantize_expert_params``) and is served by gmm/decode only.
+    ``pred_idx`` [B*S, k] is the router-lookahead hint for the fused
+    decode path (ignored elsewhere; never changes outputs).
     """
     b, s, d = x.shape
     x2d = x.reshape(b * s, d)
@@ -122,5 +146,6 @@ def moe(params: Dict, cfg: ModelConfig, x, top_k: int, *,
     if needs_mesh and mesh is None:
         fn, _ = _IMPLS["dense"]
     y2d, aux = fn(params, cfg, x2d, top_k, mesh=mesh, use_kernel=use_kernel,
-                  a2a_chunks=a2a_chunks)
+                  a2a_chunks=a2a_chunks, expert_dtype=expert_dtype,
+                  pred_idx=pred_idx)
     return y2d.reshape(b, s, d), aux

@@ -42,6 +42,33 @@ def route(params: Dict, cfg: ModelConfig, x2d, top_k: int):
     return weights, idx, aux
 
 
+def route_lookahead(params: Dict, cfg: ModelConfig, x2d, top_k: int):
+    """Predict this layer's top-k expert ids from the *previous* layer's
+    pre-FFN hidden state -> pred_idx [T, k] i32.
+
+    The exact router input (this layer's post-attention normed hidden) is
+    not available until the previous layer's FFN and this layer's
+    attention have run -- which is precisely the dependency the lookahead
+    wants to break.  So the hint scores the previous layer's pre-FFN
+    hidden through *this* layer's router instead: residual streams change
+    slowly across adjacent layers, so the top-k sets usually agree, and
+    the prediction depends only on the scan carry -- the staged weight
+    gathers it drives are schedulable before this layer's attention
+    (DESIGN.md §7).  Only the id *selection* is replicated from ``route``
+    (same scoring function, same ``top_k`` tie-breaking); weights, NAEE
+    skipping and the aux loss stay with ``route`` on the true input --
+    consumers hit-select staged loads against the true ids, so a miss
+    costs a fallback load, never an output change.
+    """
+    logits = x2d.astype(jnp.float32) @ params["router"]          # [T, E]
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(scores, top_k)
+    return idx
+
+
 def capacity(t: int, top_k: int, num_experts: int, factor: float) -> int:
     """Per-expert buffer rows for the capacity-based dispatch family."""
     c = int(math.ceil(t * top_k / num_experts * factor))

@@ -57,6 +57,20 @@ class ModelOpts:
     #: sort plan, no packed buffer; per-layer k changes issued FLOPs.
     #: The gmm path stays the equivalence oracle (default)
     use_moe_decode_kernel: bool = False
+    #: storage dtype for routed expert tiles: "bf16" (native) | "int8" |
+    #: "int4".  Quantized runs expect params prepared by
+    #: ``models.moe.quantize_expert_params`` (Engine does this at load) and
+    #: are served by the gmm/decode dispatch impls, which dequantize tiles
+    #: in VMEM (kernel) or after the gather (jnp).  Part of the runner's
+    #: compiled-graph specialization key -- bf16 and int8 engines never
+    #: share an executable.
+    expert_dtype: str = "bf16"
+    #: router lookahead: on decode steps, predict layer i's top-k ids from
+    #: layer i-1's pre-FFN hidden (scan carry) and stage expert-weight
+    #: gathers on the prediction, hit-selected against the true ids --
+    #: numerically a no-op that breaks the router->weight-load dependency
+    #: chain (DESIGN.md §7)
+    router_lookahead: bool = False
 
 
 DEFAULT_OPTS = ModelOpts()

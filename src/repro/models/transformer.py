@@ -4,6 +4,14 @@ Supports the plain LM, the VLM variant (precomputed patch embeddings
 concatenated ahead of the token embeddings -- frontend stub per assignment),
 and exposes train / prefill / decode entry points used by the launcher,
 serving engine and dry-run.
+
+Decode steps with ``opts.router_lookahead`` carry each layer's pre-FFN
+hidden one layer forward through the stack scan: layer i's expert ids are
+predicted from layer i-1's carry *before* layer i's attention, so staged
+expert-weight loads no longer serialize behind the router (hit-selected
+against the true ids -- numerically exact; models/blocks.py, DESIGN.md §7).
+``opts.expert_dtype`` selects int8/int4 expert-tile storage with in-kernel
+dequant on the gmm/decode MoE paths.
 """
 
 from __future__ import annotations

@@ -31,6 +31,7 @@ plan from the same runner and weights.
 from __future__ import annotations
 
 import time
+from dataclasses import replace
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -64,6 +65,8 @@ class Engine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
                  use_moe_decode: Optional[bool] = None,
+                 expert_dtype: Optional[str] = None,
+                 router_lookahead: Optional[bool] = None,
                  preemption: Optional[bool] = None,
                  scheduler: str = "fifo", truncate_prompts: bool = False,
                  eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
@@ -120,6 +123,32 @@ class Engine:
         self.prefill_chunk = (min(prefill_chunk or prefill_pad,
                                   cache_buf_len(cfg, max_len))
                               if self.chunked else 0)
+
+        # Quantized expert tiles: quantize at load so the engine never
+        # holds both weight copies, and bake the dtype into opts -- it
+        # joins every runner specialization key, so bf16 and quantized
+        # engines never share a compiled graph.
+        from repro.models.moe import QUANT_DTYPES, quantize_expert_params
+        ed = opts.expert_dtype if expert_dtype is None else expert_dtype
+        if ed not in ("bf16",) + QUANT_DTYPES:
+            raise ValueError(f"expert_dtype={ed!r}; want 'bf16' or one of "
+                             f"{QUANT_DTYPES}")
+        if ed != "bf16":
+            impl = opts.moe_impl or cfg.moe_impl
+            if not cfg.is_moe or impl not in ("gmm", "decode"):
+                raise ValueError(
+                    f"expert_dtype={ed!r} is served by the gmm/decode MoE "
+                    f"impls only (cfg {cfg.name!r} resolves to {impl!r})")
+            params = quantize_expert_params(params, cfg, ed)
+        rl = (opts.router_lookahead if router_lookahead is None
+              else bool(router_lookahead))
+        if rl and any(b.kind == "mamba" for b in cfg.pattern()):
+            raise ValueError("router_lookahead carries the pre-FFN hidden "
+                             "across layers; mamba blocks have none")
+        if ed != opts.expert_dtype or rl != opts.router_lookahead:
+            opts = replace(opts, expert_dtype=ed, router_lookahead=rl)
+        self.expert_dtype = ed
+        self.router_lookahead = rl
 
         self.runner = ModelRunner(cfg, params, mesh=mesh, opts=opts)
         self.plan_name = BASE_PLAN

@@ -4,21 +4,28 @@ The runner owns the parameters and every jitted graph the engine steps
 through.  Graphs are cached in a specialization table keyed by
 ``(plan, kind, width, ...)``:
 
-* ``(plan, "decode", B, use_kernel, n_blocks, moe_decode)`` -- one-token
-  step over all B slots.  ``use_kernel`` switches paged decode between the
-  gather oracle and the block-table-native flash-decode kernel;
-  ``n_blocks`` is the kernel's static live-page walk bound (a power-of-two
-  bucket from ``KVCache.live_blocks``), so a growing context steps through
-  at most O(log n_blk) graphs while short contexts never pay full-table
-  traffic; ``moe_decode`` routes decode-shaped MoE dispatch through the
-  fused routed-expert path instead of the sort-based gmm plan;
-* ``(plan, "chunk", C)``        -- fixed-width ``[B, C]`` chunked-prefill
-  step: every prompt, whatever its length, runs through this single graph
-  (no more jit-per-padded-length).  Preemption resume rides this same
-  graph -- re-prefilling a victim's prompt + generated-so-far is just a
-  longer fill, so recompute adds no new graph family;
-* ``(plan, "prefill", L)``      -- legacy whole-prompt ``[1, L]`` graph for
-  stacks chunked prefill cannot serve (mamba state carry).
+* ``(plan, "decode", B, use_kernel, n_blocks, moe_decode, expert_dtype)``
+  -- one-token step over all B slots.  ``use_kernel`` switches paged
+  decode between the gather oracle and the block-table-native
+  flash-decode kernel; ``n_blocks`` is the kernel's static live-page walk
+  bound (a power-of-two bucket from ``KVCache.live_blocks``), so a
+  growing context steps through at most O(log n_blk) graphs while short
+  contexts never pay full-table traffic; ``moe_decode`` routes
+  decode-shaped MoE dispatch through the fused routed-expert path instead
+  of the sort-based gmm plan;
+* ``(plan, "chunk", C, expert_dtype)`` -- fixed-width ``[B, C]``
+  chunked-prefill step: every prompt, whatever its length, runs through
+  this single graph (no more jit-per-padded-length).  Preemption resume
+  rides this same graph -- re-prefilling a victim's prompt +
+  generated-so-far is just a longer fill, so recompute adds no new graph
+  family;
+* ``(plan, "prefill", L, expert_dtype)`` -- legacy whole-prompt ``[1, L]``
+  graph for stacks chunked prefill cannot serve (mamba state carry).
+
+``expert_dtype`` (appended last so older key-indexing callers keep
+working) is the expert-tile storage dtype from ``opts``: quantized and
+bf16 engines must never share a compiled graph, because the quantized
+graphs bake in the int8/scale-row parameter layout.
 
 Multiple LExI plans share the runner: ``add_plan`` validates a plan
 against the base config and derives the plan's config + regrouped
@@ -95,7 +102,8 @@ class ModelRunner:
               else bool(moe_decode))
         if block_tables is None:            # contiguous layout: gather-free
             uk, kernel_blocks = False, None
-        key = (plan, "decode", int(tokens.shape[0]), uk, kernel_blocks, md)
+        key = (plan, "decode", int(tokens.shape[0]), uk, kernel_blocks, md,
+               self.opts.expert_dtype)
         if key not in self._jit:
             opts = replace(self.opts, use_paged_kernel=uk,
                            use_moe_decode_kernel=md)
@@ -110,7 +118,7 @@ class ModelRunner:
                       block_tables=None, *, plan: str = BASE_PLAN):
         """One ``[B, C]`` chunked-prefill step -> (logits [B,V], caches)."""
         cfg, params = self.plans[plan]
-        key = (plan, "chunk", int(tokens.shape[1]))
+        key = (plan, "chunk", int(tokens.shape[1]), self.opts.expert_dtype)
         if key not in self._jit:
             self._jit[key] = jax.jit(
                 lambda p, t, po, li, c, bt: models.chunk_prefill_fn(
@@ -127,7 +135,8 @@ class ModelRunner:
         slot (mamba fallback -- see kv_cache.scatter_slot).
         """
         cfg, params = self.plans[plan]
-        key = (plan, "prefill", int(tokens.shape[1]))
+        key = (plan, "prefill", int(tokens.shape[1]),
+               self.opts.expert_dtype)
         if key not in self._jit:
             self._jit[key] = jax.jit(
                 lambda p, t, po, c: models.prefill_fn(

@@ -1,0 +1,429 @@
+"""Property harness for quantized expert tiles + router lookahead
+(DESIGN.md §7).
+
+Covers the quantized storage format (round-trip error bounds, int4
+pack/unpack), the in-kernel-dequant fused decode and ragged gmm kernels in
+interpret mode against the numpy/f64 dequant oracle, the jnp
+dequant-after-gather fallbacks, the lookahead hit-select no-op, and the
+serving contracts: quantize-at-load, greedy-token match + ppl pin on a
+trained model under a heterogeneous LExI plan, spec-key separation of
+bf16/int8 engines, and the bf16-only guard on the capacity/EP impls.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import models
+from repro.configs import get_config
+from repro.core import iter_moe_layer_params
+from repro.kernels import ops, ref
+from repro.kernels.moe_decode import (
+    moe_decode_quant_pallas,
+    moe_decode_routed_jnp,
+    moe_decode_routed_quant_jnp,
+)
+from repro.models.moe import (
+    QUANT_DTYPES,
+    dequantize_experts,
+    moe,
+    moe_decode,
+    moe_gmm,
+    quantize_expert_params,
+    quantize_experts,
+    quantize_moe_layer,
+    route,
+    route_lookahead,
+    unpack_int4,
+)
+from repro.models.moe import params as moe_params
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+def _random_case(seed, b, e, k, d=32, f=48):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    w1 = (rng.normal(size=(e, d, 2 * f)) * 0.05).astype(np.float32)
+    w2 = (rng.normal(size=(e, f, d)) * 0.05).astype(np.float32)
+    idx = rng.integers(0, e, size=(b, k)).astype(np.int32)
+    w = rng.random((b, k)).astype(np.float32)
+    return x, w1, w2, idx, w
+
+
+def _quant_case(seed, b, e, k, dtype, d=32, f=48):
+    x, w1, w2, idx, w = _random_case(seed, b, e, k, d=d, f=f)
+    w1q, w2q, s1, s2 = quantize_experts(jnp.asarray(w1), jnp.asarray(w2),
+                                        dtype)
+    return (jnp.asarray(x), w1q, w2q, s1, s2, jnp.asarray(idx),
+            jnp.asarray(w))
+
+
+def _np_case(case):
+    return tuple(np.asarray(a) for a in case)
+
+
+# --------------------------------------------------------------------------- #
+# Storage format
+# --------------------------------------------------------------------------- #
+
+
+class TestQuantFormat:
+    def test_int4_pack_unpack_roundtrip(self):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.integers(-8, 8, size=(4, 10, 5)).astype(np.int8))
+        for axis in (0, 1):
+            packed = moe_params._pack_int4(q, axis=axis)
+            assert packed.shape[axis] == q.shape[axis] // 2
+            assert packed.dtype == jnp.int8
+            out = unpack_int4(packed, axis=axis)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+
+    @pytest.mark.parametrize("dtype", QUANT_DTYPES)
+    def test_roundtrip_error_bound(self, dtype):
+        """Symmetric absmax quantization: every element reconstructs within
+        half a quantization step of its channel's scale."""
+        _, w1, w2, _, _ = _random_case(1, 1, 6, 1)
+        w1q, w2q, s1, s2 = quantize_experts(jnp.asarray(w1),
+                                            jnp.asarray(w2), dtype)
+        dw1, dw2 = dequantize_experts(w1q, w2q, s1, s2, dtype)
+        e, d, twof = w1.shape
+        f = twof // 2
+        err1 = np.abs(np.asarray(dw1) - w1).reshape(e, d, 2, f)
+        bound1 = 0.5 * np.asarray(s1)[:, None] + 1e-6
+        assert (err1 <= bound1).all()
+        err2 = np.abs(np.asarray(dw2) - w2)
+        bound2 = 0.5 * np.asarray(s2)[..., None] + 1e-6
+        assert (err2 <= bound2).all()
+        # channel extrema (the absmax elements) land exactly on +-qmax
+        assert float(np.max(np.abs(np.asarray(dw1) - w1))) < float(
+            np.max(np.asarray(s1)))
+
+    @pytest.mark.parametrize("dtype", QUANT_DTYPES)
+    def test_int4_packs_contraction_dim(self, dtype):
+        _, w1, w2, _, _ = _random_case(2, 1, 4, 1, d=32, f=48)
+        w1q, w2q, s1, s2 = quantize_experts(jnp.asarray(w1),
+                                            jnp.asarray(w2), dtype)
+        dp = 16 if dtype == "int4" else 32
+        assert w1q.shape == (4, dp, 96) and w1q.dtype == jnp.int8
+        assert w2q.shape == (4, 48, dp) and w2q.dtype == jnp.int8
+        assert s1.shape == (4, 2, 48) and s1.dtype == jnp.float32
+        assert s2.shape == (4, 48) and s2.dtype == jnp.float32
+
+    def test_rejects_bad_dtype_and_double_quantize(self):
+        _, w1, w2, _, _ = _random_case(3, 1, 2, 1)
+        with pytest.raises(ValueError, match="not in"):
+            quantize_experts(jnp.asarray(w1), jnp.asarray(w2), "fp8")
+        p = {"w1": jnp.asarray(w1), "w2": jnp.asarray(w2)}
+        qp = quantize_moe_layer(p, "int8")
+        with pytest.raises(ValueError, match="already quantized"):
+            quantize_moe_layer(qp, "int8")
+
+    def test_quantize_expert_params_shares_non_expert_leaves(self):
+        cfg = get_config("olmoe-1b-7b").reduced().with_(
+            num_layers=2, dtype="float32")
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        qparams = quantize_expert_params(params, cfg, "int8")
+        # non-expert leaves are the same arrays, not copies
+        assert qparams["embed"] is params["embed"]
+        g0 = params["stack"]["groups"][0]
+        q0 = qparams["stack"]["groups"][0]
+        assert q0["attn"] is g0["attn"]
+        assert q0["moe"]["router"] is g0["moe"]["router"]
+        assert q0["moe"]["w1"].dtype == jnp.int8
+        assert "w1_scale" in q0["moe"] and "w1_scale" not in g0["moe"]
+
+
+# --------------------------------------------------------------------------- #
+# Kernel vs f64 dequant oracle (interpret mode: kernel body runs on CPU)
+# --------------------------------------------------------------------------- #
+
+
+def _quant_kernel(case, dtype, **kw):
+    return np.asarray(moe_decode_quant_pallas(*case, dtype=dtype,
+                                              interpret=True, **kw))
+
+
+class TestQuantKernelVsOracle:
+    @pytest.mark.parametrize("dtype", QUANT_DTYPES)
+    @pytest.mark.parametrize("b,e,k", [
+        (1, 8, 2),      # B=1: the single-sequence decode step
+        (8, 4, 4),      # k == E: every expert routed by every token
+        (7, 5, 3),      # nothing power-of-two
+    ])
+    def test_matches_f64_dequant_oracle(self, dtype, b, e, k):
+        case = _quant_case(b * 31 + e + k, b, e, k, dtype)
+        exp = ref.moe_decode_quant_ref(*_np_case(case), dtype=dtype)
+        out = _quant_kernel(case, dtype, block_f=16)   # multi f-step accum
+        np.testing.assert_allclose(out, exp, **TOL)
+        fb = np.asarray(moe_decode_routed_quant_jnp(*case, dtype=dtype))
+        np.testing.assert_allclose(fb, exp, **TOL)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 8),
+           st.sampled_from(QUANT_DTYPES), st.sampled_from((16, 48)),
+           st.integers(0, 10_000))
+    def test_property_fuzz(self, b, e, k, dtype, block_f, seed):
+        k = min(k, e)
+        case = _quant_case(seed, b, e, k, dtype)
+        exp = ref.moe_decode_quant_ref(*_np_case(case), dtype=dtype)
+        np.testing.assert_allclose(_quant_kernel(case, dtype,
+                                                 block_f=block_f),
+                                   exp, **TOL)
+        np.testing.assert_allclose(
+            np.asarray(moe_decode_routed_quant_jnp(*case, dtype=dtype)),
+            exp, **TOL)
+
+    @pytest.mark.parametrize("dtype", QUANT_DTYPES)
+    def test_duplicate_expert_ids_accumulate(self, dtype):
+        x, w1q, w2q, s1, s2, _, w = _quant_case(3, 2, 4, 2, dtype)
+        idx = jnp.asarray([[1, 1], [3, 3]], jnp.int32)
+        case = (x, w1q, w2q, s1, s2, idx, w)
+        exp = ref.moe_decode_quant_ref(*_np_case(case), dtype=dtype)
+        np.testing.assert_allclose(_quant_kernel(case, dtype), exp, **TOL)
+
+    @pytest.mark.parametrize("dtype", QUANT_DTYPES)
+    def test_ops_wrapper_matches_kernel(self, dtype):
+        """ops.moe_decode_quant (the jnp path the engine runs off-TPU) and
+        the interpret-mode kernel body agree."""
+        case = _quant_case(11, 6, 8, 3, dtype)
+        fb = np.asarray(ops.moe_decode_quant(*case, dtype=dtype))
+        np.testing.assert_allclose(_quant_kernel(case, dtype, block_f=16),
+                                   fb, **TOL)
+
+    @pytest.mark.parametrize("dtype", QUANT_DTYPES)
+    def test_quant_tracks_full_precision(self, dtype):
+        """Quantized output == full-precision output on the *dequantized*
+        weights (the only error quantization adds is in the weights)."""
+        case = _quant_case(17, 4, 6, 2, dtype)
+        x, w1q, w2q, s1, s2, idx, w = case
+        dw1, dw2 = dequantize_experts(w1q, w2q, s1, s2, dtype)
+        y_fp = np.asarray(moe_decode_routed_jnp(x, dw1, dw2, idx, w))
+        y_q = np.asarray(moe_decode_routed_quant_jnp(*case, dtype=dtype))
+        np.testing.assert_allclose(y_q, y_fp, **TOL)
+
+
+# --------------------------------------------------------------------------- #
+# Impl-level: quantized decode == quantized gmm (kernel and jnp paths)
+# --------------------------------------------------------------------------- #
+
+
+def _layer(e, k, *, shared=False, seed=0):
+    cfg = get_config("olmoe-1b-7b").reduced().with_(
+        num_experts=e, moe_top_k=k, dtype="float32",
+        moe_capacity_factor=float(e),
+        num_shared_experts=1 if shared else 0,
+        shared_expert_d_ff=32 if shared else 0)
+    params = models.init_params(jax.random.PRNGKey(seed), cfg)
+    _, mp = next(iter_moe_layer_params(params, cfg))
+    return cfg, mp
+
+
+class TestQuantImplEquivalence:
+    @pytest.mark.parametrize("dtype", QUANT_DTYPES)
+    @pytest.mark.parametrize("e,k,t,shared", [
+        (8, 2, 1, False),
+        (8, 8, 4, False),    # k == E
+        (4, 2, 7, True),     # shared expert stays full precision
+    ])
+    def test_decode_matches_gmm_quant(self, dtype, e, k, t, shared):
+        cfg, mp = _layer(e, k, shared=shared)
+        qmp = quantize_moe_layer(mp, dtype)
+        x = jax.random.normal(jax.random.PRNGKey(t), (t, cfg.d_model))
+        y_dec, _ = moe_decode(qmp, cfg, x, k, expert_dtype=dtype)
+        y_dk, _ = moe_decode(qmp, cfg, x, k, use_kernel=True,
+                             expert_dtype=dtype)
+        y_gmm, _ = moe_gmm(qmp, cfg, x, k, expert_dtype=dtype)
+        y_gk, _ = moe_gmm(qmp, cfg, x, k, use_kernel=True,
+                          expert_dtype=dtype)
+        np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_gmm),
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_dk),
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(y_gmm), np.asarray(y_gk),
+                                   **TOL)
+
+    def test_unquantized_params_give_clear_error(self):
+        cfg, mp = _layer(4, 2)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, cfg.d_model))
+        with pytest.raises(ValueError, match="quantize_expert_params"):
+            moe_decode(mp, cfg, x, 2, expert_dtype="int8")
+
+    def test_registry_guards_bf16_only_impls(self):
+        cfg, mp = _layer(4, 2)
+        qmp = quantize_moe_layer(mp, "int8")
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 2, cfg.d_model))
+        with pytest.raises(ValueError, match="gmm.*decode|decode.*gmm"):
+            moe(qmp, cfg, x, 2, impl="dense", expert_dtype="int8")
+        # gmm and decode serve it
+        y0, _ = moe(qmp, cfg, x, 2, impl="gmm", expert_dtype="int8")
+        y1, _ = moe(qmp, cfg, x, 2, impl="decode", expert_dtype="int8")
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), **TOL)
+
+
+# --------------------------------------------------------------------------- #
+# Router lookahead: a numeric no-op that reorders dependencies
+# --------------------------------------------------------------------------- #
+
+
+class TestLookahead:
+    def test_pred_idx_is_exact_noop_bf16(self):
+        x, w1, w2, idx, w = map(jnp.asarray, _random_case(5, 6, 8, 3))
+        pred = jax.random.randint(jax.random.PRNGKey(0), idx.shape, 0, 8)
+        y0 = moe_decode_routed_jnp(x, w1, w2, idx, w)
+        y1 = moe_decode_routed_jnp(x, w1, w2, idx, w, pred.astype(jnp.int32))
+        y2 = moe_decode_routed_jnp(x, w1, w2, idx, w, idx)  # all hits
+        assert jnp.array_equal(y0, y1) and jnp.array_equal(y0, y2)
+
+    @pytest.mark.parametrize("dtype", QUANT_DTYPES)
+    def test_pred_idx_is_exact_noop_quant(self, dtype):
+        case = _quant_case(5, 6, 8, 3, dtype)
+        idx = case[5]
+        pred = jax.random.randint(jax.random.PRNGKey(1), idx.shape, 0, 8)
+        y0 = moe_decode_routed_quant_jnp(*case, dtype=dtype)
+        y1 = moe_decode_routed_quant_jnp(*case, dtype=dtype,
+                                         pred_idx=pred.astype(jnp.int32))
+        assert jnp.array_equal(y0, y1)
+
+    def test_route_lookahead_selects_like_route(self):
+        """Given the *true* router input, the lookahead prediction equals
+        the ids ``route`` selects (same scoring, same tie-breaking)."""
+        cfg, mp = _layer(8, 3)
+        x = jax.random.normal(jax.random.PRNGKey(2), (5, cfg.d_model))
+        _, idx, _ = route(mp, cfg, x, 3)
+        pred = route_lookahead(mp, cfg, x, 3)
+        assert pred.dtype == jnp.int32 and pred.shape == idx.shape
+        np.testing.assert_array_equal(np.asarray(pred), np.asarray(idx))
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level serving contracts
+# --------------------------------------------------------------------------- #
+
+
+def _moe_plan_cfg():
+    cfg = get_config("olmoe-1b-7b").reduced().with_(
+        num_layers=4, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        num_experts=8, moe_top_k=4, moe_d_ff=64, vocab_size=128,
+        vocab_pad_multiple=16, dtype="float32", moe_impl="gmm")
+    return cfg.with_lexi_plan((4, 2, 1, 3))
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Small trained MoE so routing/logits have real structure (the greedy
+    match and ppl pin are vacuous on random weights)."""
+    from repro.data import DataConfig
+    from repro.optim import AdamW
+    from repro.training import train
+    cfg = get_config("olmoe-1b-7b").reduced().with_(
+        num_layers=4, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+        num_experts=8, moe_top_k=4, moe_d_ff=128, vocab_size=512,
+        vocab_pad_multiple=16, dtype="float32", moe_impl="gmm")
+    dc = DataConfig(cfg.vocab_size, seq_len=64, global_batch=16, seed=0)
+    res = train(cfg, dc, total_steps=100,
+                optimizer=AdamW(peak_lr=2e-3, total_steps=100,
+                                warmup_steps=10))
+    return cfg, res.state.params, dc
+
+
+def _serve(cfg, params, plan=None, **engine_kw):
+    from repro.serving import Engine, Request
+    rng = np.random.default_rng(4)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, n
+                                        ).astype(np.int32),
+                    max_new_tokens=6)
+            for i, n in enumerate((5, 9, 13))]
+    eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_chunk=4,
+                 **engine_kw)
+    if plan is not None:
+        eng.add_plan("lexi", plan)
+    res = eng.serve(reqs, plan="lexi" if plan is not None else None)
+    return eng, [r.tokens for r in res]
+
+
+class TestEngineQuant:
+    def test_int8_greedy_match_and_ppl_pin(self, trained):
+        """int8 quantize-at-load under a heterogeneous LExI plan: greedy
+        decode must track the bf16 engine almost token-for-token, and
+        held-out ppl through the quantized gmm path must stay within
+        +0.1 of full precision (the ISSUE's acceptance pin)."""
+        from repro.core.apply import apply_plan_params
+        from repro.models.opts import ModelOpts
+        from repro.training import eval_perplexity
+        from repro.core import LexiPlan
+        cfg, params, dc = trained
+        plan = LexiPlan(arch=cfg.name, budget=10, plan=(4, 2, 1, 3),
+                        fitness=0.0, method="uniform", k_base=cfg.moe_top_k)
+        _, toks_bf = _serve(cfg, params, plan=plan, use_moe_decode=True)
+        _, toks_q = _serve(cfg, params, plan=plan, use_moe_decode=True,
+                           expert_dtype="int8")
+        match = sum(a == b for s_bf, s_q in zip(toks_bf, toks_q)
+                    for a, b in zip(s_bf, s_q))
+        total = sum(len(s) for s in toks_bf)
+        assert match / total >= 0.9, (toks_bf, toks_q)
+
+        cfg_l, params_l = apply_plan_params(params, cfg, plan)
+        ppl_fp = float(eval_perplexity(params_l, cfg_l, dc, steps=4,
+                                       opts=ModelOpts(moe_impl="gmm")))
+        qp = quantize_expert_params(params_l, cfg_l, "int8")
+        ppl_q = float(eval_perplexity(
+            qp, cfg_l, dc, steps=4,
+            opts=ModelOpts(moe_impl="gmm", expert_dtype="int8")))
+        assert ppl_q - ppl_fp <= 0.1, (ppl_fp, ppl_q)
+
+    def test_spec_keys_separate_dtypes(self):
+        """bf16 and int8 engines never share a compiled graph: every key
+        carries the expert dtype (appended last) and the key sets are
+        disjoint."""
+        cfg = _moe_plan_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        eng_bf, _ = _serve(cfg, params, use_moe_decode=True)
+        eng_q, _ = _serve(cfg, params, use_moe_decode=True,
+                          expert_dtype="int8")
+        keys_bf = eng_bf.runner.compiled_specializations()
+        keys_q = eng_q.runner.compiled_specializations()
+        assert keys_bf and all(k[-1] == "bf16" for k in keys_bf)
+        assert keys_q and all(k[-1] == "int8" for k in keys_q)
+        assert not set(keys_bf) & set(keys_q)
+        # pre-existing positional indexing still holds (dtype appended)
+        dec = [k for k in keys_q if k[1] == "decode"]
+        assert dec and all(k[5] is True for k in dec)
+
+    def test_lookahead_engine_token_exact(self):
+        cfg = _moe_plan_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        _, toks_off = _serve(cfg, params, use_moe_decode=True)
+        eng_on, toks_on = _serve(cfg, params, use_moe_decode=True,
+                                 router_lookahead=True)
+        assert toks_on == toks_off
+        assert eng_on.router_lookahead is True
+
+    def test_engine_quantizes_at_load(self):
+        cfg = _moe_plan_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        from repro.serving import Engine
+        eng = Engine(cfg, params, max_batch=2, max_len=64,
+                     expert_dtype="int8")
+        _, qp = eng.runner.plans["base"]
+        moe_leaf = qp["stack"]["groups"][0]["moe"]
+        assert moe_leaf["w1"].dtype == jnp.int8
+        assert "w1_scale" in moe_leaf
+        # original params untouched
+        assert params["stack"]["groups"][0]["moe"]["w1"].dtype != jnp.int8
+
+    def test_engine_validation_errors(self):
+        from repro.serving import Engine
+        cfg = _moe_plan_cfg()
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="bf16"):
+            Engine(cfg, params, expert_dtype="fp8")
+        with pytest.raises(ValueError, match="gmm"):
+            Engine(cfg.with_(moe_impl="dense"), params, expert_dtype="int8")
+        mamba_cfg = get_config("mamba2-780m").reduced()
+        with pytest.raises(ValueError, match="mamba"):
+            Engine(mamba_cfg, {}, router_lookahead=True,
+                   cache_layout="contiguous")
