@@ -34,6 +34,9 @@ def main():
                     help="expert-tile storage dtype for BOTH engines "
                          "(quantize-at-load; ppl is evaluated through the "
                          "same quantized gmm path)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share already-computed KV pages across requests "
+                         "with a common prompt prefix (refcounted, COW)")
     args = ap.parse_args()
 
     # -- train a small MoE so routing has real structure ------------------- #
@@ -68,12 +71,16 @@ def main():
     # -- ONE engine, one set of weights, two specializations ---------------- #
     eng = Engine(cfg, params, max_batch=4, max_len=128, prefill_pad=16,
                  num_pages=args.num_pages, preemption=args.preemption,
-                 expert_dtype=ed)
+                 expert_dtype=ed, prefix_cache=args.prefix_cache)
     eng.serve(reqs())
     base_tput = eng.throughput()
     base_ppl = ppl(params, cfg)
     print(f"baseline  top-k={cfg.moe_top_k} experts={ed}: "
           f"{base_tput:8.1f} tok/s   ppl={base_ppl:.3f}")
+    if args.prefix_cache:
+        s = eng.stats
+        print(f"  prefix cache: hit={s['prefix_hit_tokens']} tokens "
+              f"({s['prefix_hit_rate']:.0%}) cow={s['cow_copies']}")
 
     # -- LExI plan at 50% budget served from the SAME runner ---------------- #
     budget = cfg.num_moe_layers * cfg.moe_top_k // 2

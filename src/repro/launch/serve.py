@@ -40,6 +40,9 @@ def _report(tag: str, eng: Engine) -> float:
     s = eng.stats
     pre = (f"preempt={s['preemptions']} recompute={s['recompute_tokens']} "
            if s.get("preemptions") else "")
+    if s.get("prefix_hit_tokens"):
+        pre += (f"prefix_hit={s['prefix_hit_tokens']} "
+                f"({s['prefix_hit_rate']:.0%}) cow={s['cow_copies']} ")
     print(f"{tag}: {tput:,.1f} tok/s  "
           f"(prefill={s['prefill_tokens']} decode={s['decode_tokens']} "
           f"steps={s['steps']} {pre}"
@@ -82,6 +85,11 @@ def main() -> int:
                     help="storage dtype for routed expert tiles; int8/int4 "
                          "quantize at load and dequantize in-kernel "
                          "(gmm/decode MoE impls only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="hash-cons full KV pages so requests sharing a "
+                         "prompt prefix reuse already-computed pages "
+                         "(refcounted, copy-on-write at the boundary; "
+                         "paged layout + preemption only)")
     ap.add_argument("--router-lookahead", action="store_true",
                     help="decode steps predict each layer's expert ids from "
                          "the previous layer's hidden state and stage "
@@ -117,6 +125,7 @@ def main() -> int:
                  use_moe_decode=args.use_moe_decode or None,
                  expert_dtype=args.expert_dtype,
                  router_lookahead=args.router_lookahead or None,
+                 prefix_cache=args.prefix_cache,
                  scheduler=args.scheduler)
     print(f"arch={cfg.name} baseline top-k={cfg.moe_top_k or 'n/a'} "
           f"layout={eng.kv.layout} chunk={eng.prefill_chunk or 'whole'} "

@@ -1,5 +1,6 @@
 from repro.serving.engine import Engine  # noqa: F401
 from repro.serving.kv_cache import KVCache  # noqa: F401
+from repro.serving.prefix_cache import PrefixIndex  # noqa: F401
 from repro.serving.request import Request, Result  # noqa: F401
 from repro.serving.runner import ModelRunner  # noqa: F401
 from repro.serving.sampling import sample  # noqa: F401

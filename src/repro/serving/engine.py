@@ -68,6 +68,7 @@ class Engine:
                  expert_dtype: Optional[str] = None,
                  router_lookahead: Optional[bool] = None,
                  preemption: Optional[bool] = None,
+                 prefix_cache: bool = False,
                  scheduler: str = "fifo", truncate_prompts: bool = False,
                  eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
                  mesh=None, seed: int = 0):
@@ -118,6 +119,30 @@ class Engine:
             raise ValueError("preemption manages the paged pool; it needs "
                              "cache_layout='paged'")
         self.ondemand = bool(preemption)
+        # prefix caching (DESIGN.md §8): hash-cons full KV pages so a new
+        # request's admission maps already-computed prefix pages into its
+        # block table and chunked prefill starts at the first uncached
+        # position.  Needs the paged layout (page granularity is the
+        # sharing unit), the on-demand discipline (whole-lifetime
+        # reservation never releases pages early enough to share), and no
+        # ring wrap (a sliding-window ring rewrites pages in place, so a
+        # cached page's content would not stay the pure function of its
+        # token prefix the index key asserts).  Mamba stacks are excluded
+        # transitively: they force the contiguous layout.
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache:
+            if cache_layout != "paged":
+                raise ValueError("prefix_cache shares pages; it needs "
+                                 "cache_layout='paged'")
+            if not self.ondemand:
+                raise ValueError("prefix_cache needs the on-demand "
+                                 "reservation discipline (preemption=True)")
+            if cache_buf_len(cfg, max_len) < max_len:
+                raise ValueError(
+                    "prefix_cache cannot serve a sliding-window ring "
+                    f"(cache_buf_len={cache_buf_len(cfg, max_len)} < "
+                    f"max_len={max_len}): wrapped pages are rewritten in "
+                    "place, so cached content would go stale")
         # cap at the ring size: a chunk wider than the window would scatter
         # two positions into one ring slot within a single write
         self.prefill_chunk = (min(prefill_chunk or prefill_pad,
@@ -153,7 +178,8 @@ class Engine:
         self.runner = ModelRunner(cfg, params, mesh=mesh, opts=opts)
         self.plan_name = BASE_PLAN
         self._kv_kw = dict(layout=cache_layout, page_size=page_size,
-                           num_pages=num_pages)
+                           num_pages=num_pages,
+                           prefix_cache=self.prefix_cache)
         self.kv = KVCache(cfg, max_batch, max_len, **self._kv_kw)
         self.sched = Scheduler(max_batch, policy=scheduler)
 
@@ -169,9 +195,12 @@ class Engine:
         # prefill_tokens counts each prompt position once (useful work);
         # positions re-prefilled when a preempted request resumes land in
         # recompute_tokens instead, so throughput() reflects useful tokens
+        # prefix_hit_tokens counts positions served from cached pages
+        # (never computed this admission); prefill_tokens keeps counting
+        # only positions actually computed, so throughput() stays honest
         return {"prefill_tokens": 0, "decode_tokens": 0,
                 "recompute_tokens": 0, "steps": 0, "preemptions": 0,
-                "live_peak": 0}
+                "live_peak": 0, "prefix_hit_tokens": 0, "cow_copies": 0}
 
     # ------------------------------------------------------------------ #
     # Plans
@@ -232,6 +261,14 @@ class Engine:
     # ------------------------------------------------------------------ #
     # Step phases
     # ------------------------------------------------------------------ #
+    @property
+    def _salt(self):
+        """Prefix-cache chain root key: everything (beyond the tokens)
+        that changes what K/V a prefill writes.  The LExI plan changes
+        per-layer expert budgets -- hidden states and therefore K/V --
+        and the expert storage dtype changes numerics."""
+        return (self.plan_name, self.expert_dtype)
+
     def _admit(self) -> None:
         def can_allocate(slot: int, t: Tracked) -> bool:
             if self.ondemand:
@@ -244,13 +281,44 @@ class Engine:
                 # admitting into their growth budget just preempts the
                 # newcomer right back out (admit -> evict -> recompute
                 # churn that burns prefill work without finishing anyone).
-                n = t.prompt_len + max(len(t.result.tokens) - 1, 0)
+                gen = t.result.tokens
+                fill = (np.concatenate([t.prompt,
+                                        np.asarray(gen[:-1], np.int32)])
+                        if gen else t.prompt)
+                n = len(fill)
+                shared: List[int] = []
+                hit = chain = 0
+                if self.prefix_cache:
+                    # a fresh request must compute >= 1 position (its
+                    # logits come from the last prompt token); a resume
+                    # may reuse everything -- the next token was sampled
+                    # before eviction, so a full hit resumes straight to
+                    # DECODE with zero recompute
+                    cap = n if gen else n - 1
+                    shared, hit, chain = self.kv.match_prefix(
+                        self._salt, fill, cap)
+                # gate against *private* need: pages the hit serves from
+                # already-live (rc>=1) pages cost no pool capacity, while
+                # an rc-0 LRU page costs one (pinning removes it from the
+                # evictable set) and a COW boundary costs one private copy
+                # -- which nets to pages_needed minus live non-boundary
+                # hits.  fits_ever stays full-length (see KVCache).
+                cow = 1 if hit % self.kv.page_size else 0
+                cost = (self.kv.pages_needed(n)
+                        - self.kv.live_count(shared[:len(shared) - cow]))
                 headroom = len(self.sched.in_state(DECODE))
-                if self.kv.free_pages() < self.kv.pages_needed(n) + headroom:
+                if self.kv.free_pages() < cost + headroom:
                     return False
-            else:
-                n = t.prompt_len + t.req.max_new_tokens
-            return self.kv.allocate(slot, n)
+                if not self.kv.allocate(slot, n, shared=shared,
+                                        keep_below=hit):
+                    return False
+                if self.prefix_cache:
+                    t.hit_len = hit
+                    t.chain = chain
+                    t.hashed_pages = hit // self.kv.page_size
+                return True
+            return self.kv.allocate(slot,
+                                    t.prompt_len + t.req.max_new_tokens)
 
         for t in self.sched.admit(can_allocate):
             self.slot_temp[t.slot] = t.req.temperature
@@ -267,6 +335,22 @@ class Engine:
                 t.fill = t.prompt
             self.slot_budget[t.slot] = t.req.max_new_tokens - len(gen)
             self.slot_pos[t.slot] = -1
+            if t.hit_len:
+                # mapped-in pages cover [0, hit_len): chunked prefill
+                # starts at the first uncached position
+                self.stats["prefix_hit_tokens"] += t.hit_len
+                t.result.prefix_hit_tokens += t.hit_len
+                if t.hit_len % self.kv.page_size:
+                    self.stats["cow_copies"] += 1
+                    t.result.cow_copies += 1
+                t.consumed = t.hit_len
+                if t.consumed == t.fill_len:
+                    # resume with the whole fill still cached: the third,
+                    # nearly-free resume mode -- no recompute at all
+                    assert t.resuming
+                    t.state = DECODE
+                    self.slot_pos[t.slot] = t.fill_len
+                    self.slot_last[t.slot] = t.result.tokens[-1]
             if not self.chunked:
                 self._whole_prefill(t)
 
@@ -323,6 +407,32 @@ class Engine:
             if t.req.top_k and t.req.temperature > 0 else None))
         self._first_token(t, int(nxt[0]))
 
+    def _seq_tokens(self, t: Tracked, a: int, b: int) -> np.ndarray:
+        """Token content at positions [a, b): the prompt, then generated
+        tokens (position i >= prompt_len holds ``result.tokens[i - L]``
+        -- decode writes each sampled token at the position it occupies)."""
+        lo = t.prompt[a:b]
+        if b <= t.prompt_len:
+            return lo
+        gen = np.asarray(t.result.tokens[max(a - t.prompt_len, 0):
+                                         b - t.prompt_len], np.int32)
+        return np.concatenate([lo, gen]) if len(lo) else gen
+
+    def _register_pages(self, t: Tracked, written: int) -> None:
+        """Index every newly *full* page of ``t``'s slot (content below
+        ``written`` is final: chunk prefill / decode writes committed).
+        First-wins dedup in the index keeps duplicates private; the chain
+        id advances either way so the next page keys correctly."""
+        if not self.prefix_cache:
+            return
+        p = self.kv.page_size
+        while (t.hashed_pages + 1) * p <= written:
+            j = t.hashed_pages
+            page = self.kv.slot_pages(t.slot)[j]
+            t.chain = self.kv.register_page(
+                t.chain, self._seq_tokens(t, j * p, (j + 1) * p), page)
+            t.hashed_pages += 1
+
     def _chunk_prefill_step(self, prefilling: List[Tracked]) -> None:
         """Advance every prefilling slot by one fixed-width chunk.
 
@@ -331,6 +441,11 @@ class Engine:
         A resuming slot's chunks count as recompute, and finishing its
         fill transitions straight to DECODE with the token sampled before
         eviction: no re-sampling, no re-fired streaming callbacks.
+
+        With prefix caching a slot's ``consumed`` starts at ``hit_len``
+        (mapped-in pages serve the positions below), so the chunk's
+        positions/tokens start at the first uncached position with no
+        graph change -- positions are explicit arrays already.
         """
         c = self.prefill_chunk
         tokens = np.zeros((self.max_batch, c), np.int32)
@@ -341,6 +456,7 @@ class Engine:
             n = min(c, t.fill_len - t.consumed)
             tokens[t.slot, :n] = t.fill[t.consumed:t.consumed + n]
             positions[t.slot, :n] = np.arange(t.consumed, t.consumed + n)
+            self.kv.assert_private(t.slot, t.consumed, t.consumed + n)
             t.consumed += n
             if t.resuming:
                 self.stats["recompute_tokens"] += n
@@ -366,6 +482,8 @@ class Engine:
             jnp.asarray(tokens), jnp.asarray(positions),
             jnp.asarray(last_idx), self.kv.caches, self.kv.block_tables(),
             plan=self.plan_name)
+        for t in prefilling:    # chunk writes are committed: index them
+            self._register_pages(t, t.consumed)
         if sampling:
             self.key, sub = jax.random.split(self.key)
             nxt = np.asarray(sample_per_slot(logits, sub,
@@ -419,6 +537,11 @@ class Engine:
         for t in decoding:
             tokens[t.slot] = self.slot_last[t.slot]
             pos[t.slot] = self.slot_pos[t.slot]
+            # decode never writes into a shared (rc>1) page: the write
+            # position is past the shared prefix by construction (COW
+            # copied the boundary page at admission)
+            self.kv.assert_private(t.slot, int(pos[t.slot]),
+                                   int(pos[t.slot]) + 1)
         kernel_blocks = (self.kv.live_blocks(pos)
                          if self.use_kernel and self.kv.layout == "paged"
                          else None)
@@ -439,6 +562,10 @@ class Engine:
             self.slot_last[t.slot] = tok
             self.slot_budget[t.slot] -= 1
             self.stats["decode_tokens"] += 1
+            # register before any finish: a finishing request's pages park
+            # in the LRU (content intact) instead of the free list, so its
+            # prefix stays reusable after release
+            self._register_pages(t, int(self.slot_pos[t.slot]))
             done_eos = self.eos_id is not None and tok == self.eos_id
             done_len = (self.slot_budget[t.slot] <= 0
                         or self.slot_pos[t.slot] >= self.max_len - 1)
@@ -507,6 +634,12 @@ class Engine:
             self._step()
             n_steps += 1
         self.stats["wall_s"] = time.time() - t0
+        # share of prefill-source positions served from cached pages (0.0
+        # when nothing was prefilled at all, so the stat is always finite)
+        hit = self.stats["prefix_hit_tokens"]
+        denom = (hit + self.stats["prefill_tokens"]
+                 + self.stats["recompute_tokens"])
+        self.stats["prefix_hit_rate"] = hit / denom if denom else 0.0
         self.stats.update(self.sched.percentiles(batch))
         return sorted((t.result for t in batch), key=lambda r: r.uid)
 

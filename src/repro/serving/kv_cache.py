@@ -23,11 +23,25 @@ only what admission actually writes (the prompt) and grows a slot page by
 page through ``allocate_append`` as decode crosses page boundaries; when
 the pool runs dry the *engine* preempts a victim and ``release`` returns
 its pages -- the manager itself stays policy-free.
+
+With ``prefix_cache=True`` (paged only) pages are refcounted and may be
+shared across slots (DESIGN.md §8): admission adopts already-computed
+pages into a new slot's table via ``allocate(..., shared=...)``, a
+partially reused boundary page is copied before any write (copy-on-write
+-- no write may ever land in a page with refcount > 1), and a released
+page whose content is indexed by the ``PrefixIndex`` parks in an LRU of
+evictable cached pages instead of returning to the free list.  The free
+pool is then ``_free`` + LRU: ``_pop_pages`` evicts oldest-cached pages
+(unregister + posp reset) only when the free list runs dry.  Stats count
+a shared page once: ``pages_in_use`` moves only on refcount 0 <-> 1
+transitions, so ``pages_peak`` / ``free_low_watermark`` keep their PR 5
+meaning under sharing.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +50,8 @@ import numpy as np
 from repro import models
 from repro.configs.base import ModelConfig
 from repro.models.attention import TRASH_PAGE, cache_buf_len
-from repro.sharding.rules import _CACHE_RANKS, _path_str
+from repro.serving.prefix_cache import PrefixIndex
+from repro.sharding.rules import _PAGED_RANKS, _path_str
 
 
 def _pos_leaf_indexer(leaf, base_rank: int):
@@ -49,16 +64,21 @@ class KVCache:
 
     def __init__(self, cfg: ModelConfig, max_batch: int, max_len: int, *,
                  layout: str = "paged", page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 prefix_cache: bool = False):
         if layout not in ("paged", "contiguous"):
             raise ValueError(f"unknown cache layout {layout!r}")
+        if prefix_cache and layout != "paged":
+            raise ValueError("prefix_cache requires the paged layout")
         self.cfg = cfg
         self.layout = layout
         self.max_batch = max_batch
         self.max_len = max_len
         self.s_buf = cache_buf_len(cfg, max_len)
+        self.prefix_cache = prefix_cache
         self.stats = {"pages_in_use": 0, "pages_peak": 0,
-                      "free_low_watermark": 1 << 30}
+                      "free_low_watermark": 1 << 30,
+                      "cache_evictions": 0, "cow_copies": 0}
         if layout == "paged":
             self.page_size = page_size
             self.blocks_per_slot = -(-self.s_buf // page_size)
@@ -75,7 +95,12 @@ class KVCache:
                                  TRASH_PAGE, np.int32)
             self._owned: List[List[int]] = [[] for _ in range(max_batch)]
             self._table_dev = None      # device copy, refreshed lazily
-            self.stats["free_low_watermark"] = len(self._free)
+            self.ref = np.zeros(self.num_pages, np.int32)
+            # rc-0 pages whose content is still indexed, oldest first;
+            # these are *free* (evictable) but reusable without recompute.
+            self._lru: "OrderedDict[int, None]" = OrderedDict()
+            self.index = PrefixIndex(page_size) if prefix_cache else None
+            self.stats["free_low_watermark"] = self.free_pages()
         else:
             self.caches = models.init_caches(cfg, max_batch, max_len)
 
@@ -90,10 +115,18 @@ class KVCache:
         return -(-min(total_tokens, self.s_buf) // self.page_size)
 
     def free_pages(self) -> int:
-        return len(self._free) if self.layout == "paged" else 1 << 30
+        """Pages available to a new allocation: the free list plus cached
+        rc-0 pages the LRU would surrender (eviction is transparent)."""
+        if self.layout != "paged":
+            return 1 << 30
+        return len(self._free) + len(self._lru)
 
     def fits_ever(self, total_tokens: int) -> bool:
-        """Could this request ever be admitted (even on an empty pool)?"""
+        """Could this request ever be admitted (even on an empty pool)?
+
+        Deliberately ignores prefix hits: cached pages can be evicted at
+        any point before completion, so the livelock guard must hold for
+        the full worst-case footprint (DESIGN.md §8)."""
         if self.layout != "paged":
             return True
         return self.pages_needed(total_tokens) <= self.num_pages - 1
@@ -117,26 +150,57 @@ class KVCache:
             bucket *= 2
         return min(bucket, self.blocks_per_slot)
 
+    def live_count(self, pages: Sequence[int]) -> int:
+        """How many of ``pages`` are pinned live (refcount >= 1) right now.
+
+        Adopting a live page costs no free-pool capacity; adopting an
+        rc-0 LRU page removes it from the evictable set, which costs one
+        -- the admission gate uses this to price a prefix hit."""
+        return sum(1 for p in pages if self.ref[p] > 0)
+
     # ------------------------------------------------------------------ #
     # Slot lifecycle
     # ------------------------------------------------------------------ #
-    def allocate(self, slot: int, total_tokens: int) -> bool:
+    def allocate(self, slot: int, total_tokens: int, *,
+                 shared: Sequence[int] = (), keep_below: int = 0) -> bool:
         """Reserve pages covering positions [0, total_tokens); False if the
         pool cannot.
 
         Under whole-lifetime reservation this is called once with
         prompt + max_new; under on-demand admission it reserves only what
         prefill will write and ``allocate_append`` grows the slot later.
+
+        ``shared`` maps already-computed prefix pages into the slot's
+        leading table columns (refcount +1 each) before fresh pages are
+        taken.  ``keep_below`` is the number of leading positions whose
+        cached content is valid: if it ends mid-page, the boundary page is
+        copied into a private page first (copy-on-write) with positions
+        >= ``keep_below`` masked to -1, so the chunked prefill that
+        recomputes them never double-counts a position that is both in
+        the pre-write cache and in the current chunk.
+
         A failed reservation (including one that runs out of free pages
-        midway) rolls back every page already taken, so the pool is left
-        exactly as found -- the invariant is structural, not dependent on
-        ``pages_needed`` agreeing with the loop below.
+        midway) rolls back every page already taken or adopted, so the
+        pool is left exactly as found -- the invariant is structural, not
+        dependent on ``pages_needed`` agreeing with the loops below.
         """
         if self.layout != "paged":
             self._clear_contiguous_slot(slot)
             return True
         assert not self._owned[slot], f"slot {slot} already allocated"
-        return self._take(slot, self.pages_needed(total_tokens))
+        if shared:
+            assert self.prefix_cache, "shared pages need prefix_cache=True"
+            self._adopt(slot, list(shared))
+            if keep_below < len(shared) * self.page_size:
+                if not self._cow_boundary(slot, keep_below):
+                    self.release(slot)
+                    return False
+        if not self._take(slot, self.pages_needed(total_tokens)
+                          - len(self._owned[slot])):
+            if self._owned[slot]:
+                self.release(slot)
+            return False
+        return True
 
     def allocate_append(self, slot: int, total_tokens: int) -> bool:
         """Grow an allocated slot to cover positions [0, total_tokens).
@@ -155,42 +219,144 @@ class KVCache:
         return self._take(slot, self.pages_needed(total_tokens)
                           - len(self._owned[slot]))
 
+    def _pop_pages(self, need: int) -> Optional[List[int]]:
+        """Pop ``need`` reusable pages: free list first, then LRU eviction
+        (oldest cached page: unregister from the index + posp reset).
+        All or nothing; on shortfall every popped page returns to the free
+        list (evicted ones have already lost their index entries, which is
+        an accounting no-op: free_pages() is unchanged)."""
+        pages: List[int] = []
+        evicted: List[int] = []
+        while len(pages) < need and self._free:
+            pages.append(self._free.pop())
+        while len(pages) < need and self._lru:
+            page, _ = self._lru.popitem(last=False)
+            self.index.unregister(page)
+            self.stats["cache_evictions"] += 1
+            evicted.append(page)
+            pages.append(page)
+        if evicted:
+            self._reset_pages(evicted)
+        if len(pages) < need:
+            self._free.extend(reversed(pages[:len(pages) - len(evicted)]))
+            self._free.extend(evicted)
+            return None
+        return pages
+
     def _take(self, slot: int, need: int) -> bool:
-        """Append ``need`` free pages to ``slot`` (all or nothing)."""
+        """Append ``need`` private pages to ``slot`` (all or nothing)."""
         if need <= 0:
             return True
-        pages: List[int] = []
-        for _ in range(need):
-            if not self._free:
-                self._free.extend(reversed(pages))      # roll back, no leak
-                return False
-            pages.append(self._free.pop())
+        pages = self._pop_pages(need)
+        if pages is None:
+            return False
+        for p in pages:
+            self.ref[p] = 1
         have = len(self._owned[slot])
         self._owned[slot].extend(pages)
         self.table[slot, have:have + need] = pages
         self._table_dev = None
         self.stats["pages_in_use"] += need
-        self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                       self.stats["pages_in_use"])
-        self.stats["free_low_watermark"] = min(
-            self.stats["free_low_watermark"], len(self._free))
+        self._note_levels()
         return True
+
+    def _adopt(self, slot: int, shared: List[int]) -> None:
+        """Map shared prefix pages into ``slot``'s leading table columns.
+
+        Refcount +1 each; an rc-0 page (parked in the LRU) is pinned live
+        again -- its KV content is reused without any recompute."""
+        for p in shared:
+            if self.ref[p] == 0:
+                self._lru.pop(p)                  # pinned: not evictable
+                self.stats["pages_in_use"] += 1
+            self.ref[p] += 1
+        have = len(self._owned[slot])
+        self._owned[slot].extend(shared)
+        self.table[slot, have:have + len(shared)] = shared
+        self._table_dev = None
+        self._note_levels()
+
+    def _cow_boundary(self, slot: int, keep_below: int) -> bool:
+        """Copy-on-write the slot's last adopted page into a private page.
+
+        The new owner must rewrite positions >= ``keep_below`` of that
+        page, and no write may land in a refcount>1 page -- so the rows
+        are copied device-side into a fresh page with the tail positions'
+        ``posp`` masked to -1 (chunk attention reads the pre-write cache;
+        an unmasked stale entry would make the recomputed position appear
+        twice).  The source page keeps its refcount from the other owners
+        (and returns to the LRU if this adoption was its only pin)."""
+        got = self._pop_pages(1)
+        if got is None:
+            return False
+        dst = got[0]
+        j = len(self._owned[slot]) - 1
+        src = self._owned[slot][j]
+        self._copy_page(src, dst, keep_below)
+        self.ref[dst] = 1
+        self.stats["pages_in_use"] += 1
+        self.stats["cow_copies"] += 1
+        self._owned[slot][j] = dst
+        self.table[slot, j] = dst
+        self._table_dev = None
+        self._drop_ref(src, batch=None)
+        self._note_levels()
+        return True
+
+    def _drop_ref(self, page: int, batch: Optional[List[int]]) -> None:
+        """Refcount -1; on the 1 -> 0 transition the page leaves the live
+        set: indexed pages park (content intact) at the young end of the
+        LRU, unindexed ones are posp-reset and freed (appended to
+        ``batch`` when the caller batches the device reset)."""
+        self.ref[page] -= 1
+        assert self.ref[page] >= 0, f"page {page} over-released"
+        if self.ref[page] > 0:
+            return
+        self.stats["pages_in_use"] -= 1
+        if self.index is not None and self.index.is_indexed(page):
+            self._lru[page] = None
+        elif batch is not None:
+            batch.append(page)
+        else:
+            self._reset_pages([page])
+            self._free.append(page)
 
     def release(self, slot: int) -> None:
         """Return a finished slot's pages to the pool (paged) / clear the
-        slot row's position mask (contiguous)."""
+        slot row's position mask (contiguous).  Shared pages only drop a
+        refcount; the last owner's release parks indexed pages in the LRU
+        and posp-resets + frees the rest."""
         if self.layout != "paged":
             self._clear_contiguous_slot(slot)
             return
         pages = self._owned[slot]
         if not pages:
             return
-        self._reset_pages(pages)
-        self._free.extend(reversed(pages))
-        self.stats["pages_in_use"] -= len(pages)
+        dead: List[int] = []
+        for p in pages:
+            self._drop_ref(p, batch=dead)
+        if dead:
+            self._reset_pages(dead)
+            self._free.extend(reversed(dead))
         self._owned[slot] = []
         self.table[slot] = TRASH_PAGE
         self._table_dev = None
+
+    def slot_pages(self, slot: int) -> List[int]:
+        """The physical pages backing ``slot``, in block order."""
+        return self._owned[slot]
+
+    def assert_private(self, slot: int, lo: int, hi: int) -> None:
+        """Invariant check before a write: every page covering positions
+        [lo, hi) of ``slot`` must be exclusively owned (refcount == 1)."""
+        if self.layout != "paged" or hi <= lo:
+            return
+        # ring semantics: position p lands in page (p % s_buf) // page_size
+        # (sharing is refused on wrapping rings, so rc is 1 there anyway)
+        for j in {(p % self.s_buf) // self.page_size for p in range(lo, hi)}:
+            p = self._owned[slot][j]
+            assert self.ref[p] == 1, \
+                f"write into shared page {p} (rc={self.ref[p]}) slot {slot}"
 
     def block_tables(self):
         """Device block-table array for the jitted step (None if contiguous).
@@ -202,6 +368,50 @@ class KVCache:
         if self._table_dev is None:
             self._table_dev = jnp.asarray(self.table)
         return self._table_dev
+
+    def _note_levels(self) -> None:
+        self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                       self.stats["pages_in_use"])
+        self.stats["free_low_watermark"] = min(
+            self.stats["free_low_watermark"], self.free_pages())
+
+    # ------------------------------------------------------------------ #
+    # Prefix cache index
+    # ------------------------------------------------------------------ #
+    def match_prefix(self, salt: Tuple, tokens,
+                     max_tokens: int) -> Tuple[List[int], int, int]:
+        """Longest reusable cached prefix of ``tokens`` under ``salt``.
+
+        Returns ``(pages, hit_len, chain)``: the physical pages to adopt
+        (``ceil(hit_len / page_size)`` of them -- the last is the COW
+        boundary page when ``hit_len`` ends mid-page), how many leading
+        positions their content covers (capped at ``max_tokens``: a fresh
+        request must leave at least one position to compute for logits;
+        a preemption resume may reuse everything), and the chain id after
+        the last *fully* reused page -- the owner registers its next full
+        page under this id.
+        """
+        if self.index is None:
+            return [], 0, 0
+        pages, chains = self.index.match(salt, tokens)
+        hit = min(len(pages) * self.page_size, max_tokens)
+        if hit <= 0:
+            return [], 0, self.index.root(salt)
+        keep = -(-hit // self.page_size)
+        full = hit // self.page_size
+        chain = chains[full - 1] if full else self.index.root(salt)
+        return pages[:keep], hit, chain
+
+    def register_page(self, chain: int, tokens, page: int) -> int:
+        """Index slot-private page ``page`` as holding ``tokens`` after
+        prefix ``chain``; returns the chain id after it (first-wins: a
+        duplicate keeps the existing entry and this page stays private)."""
+        assert self.ref[page] == 1, f"registering shared page {page}"
+        return self.index.register(chain, tokens, page)
+
+    def prefix_root(self, salt: Tuple) -> int:
+        """Chain id of the empty prefix under ``salt``."""
+        return self.index.root(salt) if self.index is not None else 0
 
     # ------------------------------------------------------------------ #
     # Device-side hygiene
@@ -217,6 +427,24 @@ class KVCache:
             return leaf
 
         self.caches = jax.tree_util.tree_map_with_path(reset, self.caches)
+
+    def _copy_page(self, src: int, dst: int, keep_below: int) -> None:
+        """Copy page ``src``'s rows into ``dst`` across every paged leaf,
+        masking ``posp`` entries >= ``keep_below`` to -1 (the K/V bytes
+        beyond the boundary are copied but dead until rewritten)."""
+
+        def copy(path, leaf):
+            ps = _path_str(path)
+            base = next((r for rx, r in _PAGED_RANKS if rx.search(ps)), None)
+            if base is None:
+                return leaf
+            lead = _pos_leaf_indexer(leaf, base)
+            row = leaf[lead + (src,)]
+            if ps.endswith("posp"):
+                row = jnp.where(row < keep_below, row, -1)
+            return leaf.at[lead + (dst,)].set(row)
+
+        self.caches = jax.tree_util.tree_map_with_path(copy, self.caches)
 
     def _clear_contiguous_slot(self, slot: int) -> None:
         """pos = -1 on a recycled slot row (k/v bytes are masked by pos)."""
@@ -242,6 +470,7 @@ class KVCache:
         prompt window's left padding.
         """
         assert self.layout == "contiguous", "scatter is a contiguous-only path"
+        from repro.sharding.rules import _CACHE_RANKS
 
         def write(path, full, one):
             ps = _path_str(path)

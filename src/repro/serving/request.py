@@ -33,3 +33,5 @@ class Result:
     decode_tps: float = 0.0             # decode tokens/s (after first token)
     preemptions: int = 0                # times evicted under pool pressure
     recompute_tokens: int = 0           # positions re-prefilled on resume
+    prefix_hit_tokens: int = 0          # positions served from cached pages
+    cow_copies: int = 0                 # boundary pages copied before write

@@ -18,7 +18,10 @@ through.  Graphs are cached in a specialization table keyed by
   this single graph (no more jit-per-padded-length).  Preemption resume
   rides this same graph -- re-prefilling a victim's prompt +
   generated-so-far is just a longer fill, so recompute adds no new graph
-  family;
+  family.  Prefix-cache entry offsets ride it too: positions are explicit
+  ``[B, C]`` arrays, so a fill starting at the first uncached position
+  (engine ``consumed = hit_len``) is just different position values, not
+  a new graph -- the kernel/oracle attention paths need no changes;
 * ``(plan, "prefill", L, expert_dtype)`` -- legacy whole-prompt ``[1, L]``
   graph for stacks chunked prefill cannot serve (mamba state carry).
 

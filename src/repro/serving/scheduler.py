@@ -68,6 +68,12 @@ class Tracked:
     #: admission ordinal (reassigned on re-admission); the engine preempts
     #: the live request with the highest admit_seq first
     admit_seq: int = -1
+    #: prefix-cache residency state (engine-owned, reset on preemption):
+    #: chain id the next full page registers under, how many leading full
+    #: pages are already registered/adopted, and this admission's hit
+    chain: int = 0
+    hashed_pages: int = 0
+    hit_len: int = 0
     t_submit: float = 0.0
     t_admit: float = 0.0       # first admission (preserved on resume)
     t_first: float = 0.0       # first sampled token
@@ -187,6 +193,7 @@ class Scheduler:
         if 0 <= t.slot < self.max_batch:
             self.slots[t.slot] = None
         t.state, t.slot, t.consumed, t.fill = PREEMPTED, -1, 0, None
+        t.chain, t.hashed_pages, t.hit_len = 0, 0, 0
         t.result.preemptions += 1
         self.waiting.append(t)
 

@@ -1,0 +1,308 @@
+"""Prefix caching with refcounted copy-on-write page sharing (DESIGN.md §8).
+
+Three layers of coverage:
+
+* ``PrefixIndex`` units -- exact chain keys, per-salt roots, first-wins
+  dedup, unregister breaking descendant reachability.
+* ``KVCache`` sharing mechanics driven directly through the manager API --
+  adopt refcounts, COW boundary replacement, shared pages counted once in
+  the stats, release parking indexed pages in the LRU, eviction under
+  pool pressure, and the all-or-nothing rollback contract with shared
+  pages in play.
+* Engine end-to-end -- cache-on outputs byte-identical to a cache-off
+  engine (greedy), cross-serve reuse, per-Result observability, plan-key
+  separation (a page cached under one LExI plan never serves another),
+  preemption interleaving, and the constructor validation gates.
+
+The randomized shared-prefix stress lives in test_serving_stress.py; this
+file pins the deterministic contracts.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import uniform_plan
+from repro.serving import Engine, KVCache, PrefixIndex, Request
+
+SALT = ("base", "bf16")
+
+
+# --------------------------------------------------------------------------- #
+# PrefixIndex
+# --------------------------------------------------------------------------- #
+
+
+class TestPrefixIndex:
+    def test_roots_interned_per_salt(self):
+        ix = PrefixIndex(4)
+        assert ix.root(SALT) == ix.root(SALT)
+        assert ix.root(SALT) != ix.root(("lexi", "bf16"))
+
+    def test_match_walks_registered_chain(self):
+        ix = PrefixIndex(4)
+        toks = np.arange(12, dtype=np.int32)
+        c = ix.root(SALT)
+        c = ix.register(c, toks[0:4], page=7)
+        c = ix.register(c, toks[4:8], page=9)
+        pages, chains = ix.match(SALT, toks)
+        assert pages == [7, 9]
+        assert chains[-1] == c
+        # an 11-token query only has 2 full pages to consider
+        pages, _ = ix.match(SALT, toks[:11])
+        assert pages == [7, 9]
+        # different first page content: no match at all
+        other = toks.copy()
+        other[0] += 1
+        assert ix.match(SALT, other)[0] == []
+
+    def test_first_wins_dedup(self):
+        ix = PrefixIndex(4)
+        toks = np.arange(4, dtype=np.int32)
+        c1 = ix.register(ix.root(SALT), toks, page=3)
+        c2 = ix.register(ix.root(SALT), toks, page=5)
+        assert c1 == c2                      # same chain id either way
+        assert ix.is_indexed(3) and not ix.is_indexed(5)
+        assert ix.match(SALT, toks)[0] == [3]
+
+    def test_unregister_breaks_descendants(self):
+        ix = PrefixIndex(4)
+        toks = np.arange(8, dtype=np.int32)
+        c = ix.register(ix.root(SALT), toks[:4], page=3)
+        ix.register(c, toks[4:], page=5)
+        ix.unregister(3)
+        # page 5's entry survives but is unreachable: the walk stops at
+        # the first missing block
+        assert ix.match(SALT, toks)[0] == []
+        assert ix.is_indexed(5)
+        ix.unregister(3)                     # idempotent
+
+
+# --------------------------------------------------------------------------- #
+# KVCache sharing mechanics
+# --------------------------------------------------------------------------- #
+
+
+def _tiny_cfg():
+    return get_config("olmo-1b").reduced().with_(
+        num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=64, vocab_pad_multiple=16, dtype="float32")
+
+
+def _kv(num_pages=None, max_batch=3):
+    return KVCache(_tiny_cfg(), max_batch, 32, layout="paged", page_size=4,
+                   num_pages=num_pages, prefix_cache=True)
+
+
+def _seed_slot0(kv, toks):
+    """Allocate slot 0 over ``toks`` and register its full pages."""
+    assert kv.allocate(0, len(toks))
+    chain = kv.prefix_root(SALT)
+    for j in range(len(toks) // kv.page_size):
+        chain = kv.register_page(
+            chain, toks[j * kv.page_size:(j + 1) * kv.page_size],
+            kv.slot_pages(0)[j])
+    return chain
+
+
+class TestKVCacheSharing:
+    def test_adopt_refcounts_and_cow_boundary(self):
+        kv = _kv()
+        toks = np.arange(8, dtype=np.int32)
+        _seed_slot0(kv, toks)
+        p0 = list(kv.slot_pages(0))
+
+        pages, hit, _ = kv.match_prefix(SALT, toks, 7)
+        assert (pages, hit) == (p0, 7)       # capped mid-page: COW case
+        assert kv.allocate(1, 8, shared=pages, keep_below=hit)
+        p1 = kv.slot_pages(1)
+        assert p1[0] == p0[0] and kv.ref[p0[0]] == 2        # truly shared
+        assert p1[1] != p0[1] and kv.ref[p1[1]] == 1        # COW'd private
+        assert kv.ref[p0[1]] == 1            # source kept its owner only
+        assert kv.stats["cow_copies"] == 1
+        # shared page counted once: 2 (slot0) + 1 (COW copy) distinct pages
+        assert kv.stats["pages_in_use"] == 3
+        kv.assert_private(1, hit, 8)         # write range is private
+        with pytest.raises(AssertionError):
+            kv.assert_private(1, 0, 4)       # block 0 is shared
+
+    def test_full_page_hit_needs_no_cow(self):
+        kv = _kv()
+        toks = np.arange(8, dtype=np.int32)
+        _seed_slot0(kv, toks)
+        longer = np.concatenate([toks, np.arange(100, 103, dtype=np.int32)])
+        pages, hit, _ = kv.match_prefix(SALT, longer, 10)
+        assert hit == 8 and len(pages) == 2  # page-aligned: share both
+        assert kv.allocate(1, 11, shared=pages, keep_below=hit)
+        assert kv.stats["cow_copies"] == 0
+        assert kv.slot_pages(1)[:2] == kv.slot_pages(0)
+        assert kv.stats["pages_in_use"] == 3  # 2 shared (once) + 1 fresh
+
+    def test_release_parks_indexed_pages_in_lru(self):
+        kv = _kv()
+        toks = np.arange(8, dtype=np.int32)
+        _seed_slot0(kv, toks)
+        usable = kv.num_pages - 1
+        assert kv.free_pages() == usable - 2
+        kv.release(0)
+        # indexed pages are rc-0 but keep their content: the pool is fully
+        # free again, yet the prefix is still a hit
+        assert kv.stats["pages_in_use"] == 0
+        assert kv.free_pages() == usable
+        pages, hit, _ = kv.match_prefix(SALT, toks, 8)
+        assert hit == 8
+        # re-adoption pins them live again without any copy
+        assert kv.allocate(1, 8, shared=pages, keep_below=8)
+        assert kv.stats["pages_in_use"] == 2
+        assert kv.free_pages() == usable - 2
+
+    def test_lru_eviction_under_pool_pressure(self):
+        kv = _kv(num_pages=4)
+        toks = np.arange(8, dtype=np.int32)
+        _seed_slot0(kv, toks)
+        kv.release(0)                        # 2 cached in LRU, 2 free
+        assert kv.allocate(1, 16)            # needs all 4: evicts the LRU
+        assert kv.stats["cache_evictions"] == 2
+        assert kv.match_prefix(SALT, toks, 8)[1] == 0       # cache emptied
+        kv.release(1)
+        assert kv.free_pages() == 4
+
+    def test_allocate_rollback_with_shared_pages(self):
+        kv = _kv(num_pages=4, max_batch=2)
+        toks = np.arange(8, dtype=np.int32)
+        _seed_slot0(kv, toks)                # slot0 pins 2 of 4 pages
+        pages, hit, _ = kv.match_prefix(SALT, toks, 7)
+        # needs 2 shared + 1 COW + 2 fresh (16 tokens -> 4 blocks) > pool
+        assert not kv.allocate(1, 16, shared=pages, keep_below=hit)
+        # all-or-nothing: nothing leaked, slot0 untouched, hit still live
+        assert not kv.slot_pages(1)
+        assert kv.stats["pages_in_use"] == 2
+        assert kv.free_pages() == 2
+        assert [int(kv.ref[p]) for p in kv.slot_pages(0)] == [1, 1]
+        assert kv.match_prefix(SALT, toks, 8)[1] == 8
+
+    def test_constructor_rejects_contiguous(self):
+        with pytest.raises(ValueError, match="paged"):
+            KVCache(_tiny_cfg(), 2, 32, layout="contiguous",
+                    prefix_cache=True)
+
+
+# --------------------------------------------------------------------------- #
+# Engine end-to-end
+# --------------------------------------------------------------------------- #
+
+_STATE: dict = {}
+MAX_LEN = 64
+CHUNK = 4
+STEPS = 800
+
+
+def _setup():
+    if not _STATE:
+        cfg = get_config("olmoe-1b-7b").reduced().with_(
+            num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+            head_dim=32, num_experts=4, moe_top_k=2, moe_d_ff=64,
+            vocab_size=128, vocab_pad_multiple=16, dtype="float32",
+            moe_impl="gmm")
+        _STATE["cfg"] = cfg
+        _STATE["params"] = models.init_params(jax.random.PRNGKey(0), cfg)
+        _STATE["plan"] = uniform_plan(cfg, 1)
+        _STATE["engines"] = {}
+    return _STATE["cfg"]
+
+
+def _engine(prefix_cache, num_pages=None, batch=4):
+    cfg = _setup()
+    key = (prefix_cache, num_pages, batch)
+    if key not in _STATE["engines"]:
+        eng = Engine(cfg, _STATE["params"], max_batch=batch, max_len=MAX_LEN,
+                     prefill_chunk=CHUNK, cache_layout="paged", page_size=4,
+                     num_pages=num_pages, prefix_cache=prefix_cache)
+        eng.add_plan("lexi", _STATE["plan"])
+        _STATE["engines"][key] = eng
+    return _STATE["engines"][key]
+
+
+def _family(vocab, n_req, seed, plen=18, suffix=3, max_new=5):
+    """n_req requests sharing one ``plen``-token prefix + random suffixes."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, vocab, plen).astype(np.int32)
+    return [Request(uid=i, prompt=np.concatenate(
+                [head, rng.integers(0, vocab, suffix).astype(np.int32)]),
+                    max_new_tokens=max_new)
+            for i in range(n_req)]
+
+
+class TestEnginePrefixCache:
+    def test_byte_identical_and_cross_serve_reuse(self):
+        cfg = _setup()
+        off, on = _engine(False), _engine(True)
+        reqs = lambda: _family(cfg.vocab_size, 6, seed=1)
+        ref = off.serve(reqs(), max_steps=STEPS)
+        out1 = on.serve(reqs(), max_steps=STEPS)
+        assert [r.tokens for r in out1] == [r.tokens for r in ref]
+        # 6 requests, batch 4: the late admissions already hit the prefix
+        assert on.stats["prefix_hit_tokens"] > 0
+
+        out2 = on.serve(reqs(), max_steps=STEPS)
+        assert [r.tokens for r in out2] == [r.tokens for r in ref]
+        # second serve: whole prefixes (and generated pages) are cached
+        assert on.stats["prefix_hit_tokens"] > on.stats["prefill_tokens"]
+        assert 0.0 < on.stats["prefix_hit_rate"] <= 1.0
+        assert any(r.prefix_hit_tokens > 0 for r in out2)
+        assert sum(r.cow_copies for r in out2) == on.stats["cow_copies"]
+        # prefill + hits cover exactly the served prompts (no preemption)
+        assert on.stats["preemptions"] == 0
+        assert (on.stats["prefill_tokens"] + on.stats["prefix_hit_tokens"]
+                == sum(r.prompt_len for r in out2))
+        # drain: refcounts zero, every page free or parked reusable
+        assert on.kv.stats["pages_in_use"] == 0
+        assert int(on.kv.ref.sum()) == 0
+        assert on.kv.free_pages() == on.kv.num_pages - 1
+
+    def test_plan_keys_separate_caches(self):
+        cfg = _setup()
+        on = _engine(True)
+        reqs = lambda: _family(cfg.vocab_size, 4, seed=2)
+        on.serve(reqs(), max_steps=STEPS)           # warm the base salt
+        out_l1 = on.serve(reqs(), max_steps=STEPS, plan="lexi")
+        first_lexi_hits = on.stats["prefix_hit_tokens"]
+        out_l2 = on.serve(reqs(), max_steps=STEPS, plan="lexi")
+        # pages cached under the base plan must never serve the lexi plan
+        # (same tokens, different per-layer expert budgets -> different KV);
+        # within-serve sharing can still produce hits, so compare serves
+        assert on.stats["prefix_hit_tokens"] > first_lexi_hits
+        assert [r.tokens for r in out_l1] == [r.tokens for r in out_l2]
+        ref = _engine(False).serve(reqs(), max_steps=STEPS, plan="lexi")
+        assert [r.tokens for r in out_l1] == [r.tokens for r in ref]
+
+    def test_preemption_interleaved_stays_exact(self):
+        cfg = _setup()
+        # pool sized to force eviction churn: 6 shared-prefix requests,
+        # each needing ceil(21/4)=6 prompt pages, through a 13-page pool
+        off, on = _engine(False), _engine(True, num_pages=13)
+        reqs = lambda: _family(cfg.vocab_size, 6, seed=3)
+        ref = off.serve(reqs(), max_steps=STEPS)
+        out = on.serve(reqs(), max_steps=STEPS)
+        assert [r.tokens for r in out] == [r.tokens for r in ref]
+        assert [r.finished_reason for r in out] == \
+            [r.finished_reason for r in ref]
+        assert on.stats["preemptions"] > 0          # pressure was real
+        assert on.stats["prefix_hit_tokens"] > 0    # sharing still engaged
+        assert on.kv.stats["pages_in_use"] == 0
+        assert int(on.kv.ref.sum()) == 0
+        assert on.kv.free_pages() == on.kv.num_pages - 1
+
+    def test_constructor_validation(self):
+        cfg = _setup()
+        with pytest.raises(ValueError, match="paged"):
+            Engine(cfg, _STATE["params"], cache_layout="contiguous",
+                   prefix_cache=True)
+        with pytest.raises(ValueError, match="on-demand"):
+            Engine(cfg, _STATE["params"], cache_layout="paged",
+                   preemption=False, prefix_cache=True)
+        with pytest.raises(ValueError, match="sliding-window"):
+            Engine(cfg.with_(sliding_window=8), _STATE["params"],
+                   max_len=64, prefix_cache=True)

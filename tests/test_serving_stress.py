@@ -84,17 +84,20 @@ def _setup():
     return _STATE["cfg"]
 
 
-def _engine(batch, page_size=8, pool_idx=3, policy="fifo"):
+def _engine(batch, page_size=8, pool_idx=3, policy="fifo",
+            prefix_cache=False):
     """One cached engine per configuration key: examples reuse compiled
-    graphs, and reusing uids across serves is the supported pattern."""
+    graphs, and reusing uids across serves is the supported pattern.
+    A cached prefix_cache engine also carries its page index across
+    examples -- deliberately: cross-serve reuse must stay byte-exact."""
     cfg = _setup()
-    key = (batch, page_size, pool_idx, policy)
+    key = (batch, page_size, pool_idx, policy, prefix_cache)
     if key not in _STATE["engines"]:
         eng = Engine(cfg, _STATE["params"], max_batch=batch,
                      max_len=MAX_LEN, prefill_chunk=CHUNK,
                      cache_layout="paged", page_size=page_size,
                      num_pages=_pool_options(page_size)[pool_idx],
-                     scheduler=policy)
+                     scheduler=policy, prefix_cache=prefix_cache)
         eng.add_plan("lexi", _STATE["plan"])
         _STATE["engines"][key] = eng
     return _STATE["engines"][key]
@@ -113,6 +116,30 @@ def _workload(vocab: int, n_req: int, seed: int, streams=None):
         reqs.append(Request(uid=i,
                             prompt=rng.integers(0, vocab, plen).astype(np.int32),
                             max_new_tokens=mnew, stream=stream))
+    return reqs
+
+
+def _prefix_workload(vocab: int, n_req: int, seed: int, streams=None):
+    """Random prefix-family tree: requests draw a shared head, cut it at a
+    random depth, and append a private suffix -- so prompts share page
+    chains of varying length (full-page, mid-page/COW, and no overlap)."""
+    rng = np.random.default_rng(seed)
+    heads = [rng.integers(0, vocab, int(rng.integers(4, PLEN_MAX + 1)))
+             .astype(np.int32) for _ in range(int(rng.integers(1, 3)))]
+    reqs = []
+    for i in range(n_req):
+        head = heads[int(rng.integers(0, len(heads)))]
+        cut = int(rng.integers(1, len(head) + 1))
+        sfx = rng.integers(0, vocab,
+                           int(rng.integers(0, 4))).astype(np.int32)
+        prompt = np.concatenate([head[:cut], sfx])[:PLEN_MAX]
+        stream = None
+        if streams is not None:
+            streams[i] = []
+            stream = (lambda uid, tok, s=streams: s[uid].append(tok))
+        reqs.append(Request(uid=i, prompt=prompt,
+                            max_new_tokens=int(rng.integers(0, MNEW_MAX + 1)),
+                            stream=stream))
     return reqs
 
 
@@ -186,6 +213,68 @@ class TestServingStress:
         assert eng.stats["recompute_tokens"] == sum(r.recompute_tokens
                                                     for r in out)
         assert all(math.isfinite(v) for v in eng.stats.values())
+
+
+class TestPrefixCacheStress:
+    @settings(**_SETTINGS)
+    @given(st.integers(0, len(PAGE_SIZES) - 1),    # page size
+           st.integers(0, 3),                      # pool tightness
+           st.integers(0, 1),                      # fifo / sjf
+           st.integers(2, 3),                      # max_batch
+           st.integers(1, 6),                      # request count
+           st.booleans(),                          # LExI plan on/off
+           st.integers(0, 10**6))                  # workload seed
+    def test_shared_prefix_workloads(self, page_idx, pool_idx, policy_idx,
+                                     batch, n_req, plan_on, seed):
+        """Prefix-family trees under pool pressure with preemption
+        interleaved: cache-on outputs byte-identical to the cache-off
+        oracle, streams fire exactly once, the refcounted pool fully
+        drains, and no write ever lands in a refcount>1 page (the engine
+        asserts privacy before every chunk/decode write, so that
+        invariant rides every example here for free)."""
+        cfg = _setup()
+        page_size = PAGE_SIZES[page_idx]
+        plan_kw = {"plan": "lexi"} if plan_on else {}
+
+        oracle = _engine(batch)                   # cache off, unlimited
+        oracle.eos_id = None
+        ref = oracle.serve(_prefix_workload(cfg.vocab_size, n_req, seed),
+                           max_steps=STEP_BOUND, **plan_kw)
+
+        eng = _engine(batch, page_size, pool_idx, POLICIES[policy_idx],
+                      prefix_cache=True)
+        streams = {}
+        out = eng.serve(_prefix_workload(cfg.vocab_size, n_req, seed,
+                                         streams),
+                        max_steps=STEP_BOUND, **plan_kw)
+
+        usable = eng.kv.num_pages - 1
+        served_plen = 0
+        for r, ro in zip(out, ref):
+            if r.finished_reason == "rejected_kv_capacity":
+                continue        # worst-case need > pool (checked elsewhere)
+            served_plen += r.prompt_len
+            assert r.tokens == ro.tokens, f"uid {r.uid} diverged"
+            assert r.finished_reason == ro.finished_reason, f"uid {r.uid}"
+            assert streams[r.uid] == r.tokens, f"uid {r.uid} stream"
+
+        # refcount / pool drain after the workload completes
+        assert eng.kv.stats["pages_in_use"] == 0
+        assert int(eng.kv.ref.sum()) == 0
+        assert eng.kv.free_pages() == usable
+        assert eng.kv.stats["pages_peak"] <= usable
+        assert eng.sched.done()
+        eng.sched.clear_finished()
+        assert not eng.sched._uids
+
+        # accounting: computed + cached positions tile the served prompts
+        # exactly when nothing was evicted (recompute muddies the split)
+        if eng.stats["preemptions"] == 0:
+            assert (eng.stats["prefill_tokens"]
+                    + eng.stats["prefix_hit_tokens"] == served_plen)
+        assert 0.0 <= eng.stats["prefix_hit_rate"] <= 1.0
+        assert all(math.isfinite(v) for v in eng.stats.values())
+        assert eng.stats["cow_copies"] == sum(r.cow_copies for r in out)
 
 
 class TestPoolPressureAcceptance:
