@@ -99,6 +99,12 @@ def main() -> int:
                          "matters with a temperature > 0)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--scheduler", choices=["fifo", "sjf"], default="fifo")
+    ap.add_argument("--open-loop-rate", type=float, default=0.0,
+                    help="offered load in requests/s: requests arrive on a "
+                         "Poisson process at this rate instead of all at "
+                         "t=0, and the engine admits them mid-flight "
+                         "(0 = closed loop). Reported tok/s then includes "
+                         "arrival gaps -- it is goodput, not capacity")
     ap.add_argument("--lexi-budget-frac", type=float, default=None,
                     help="search a plan inline at this active-expert budget")
     ap.add_argument("--plan", default=None,
@@ -127,10 +133,24 @@ def main() -> int:
                  router_lookahead=args.router_lookahead or None,
                  prefix_cache=args.prefix_cache,
                  scheduler=args.scheduler)
+    def arrivals():
+        if args.open_loop_rate <= 0:
+            return None
+        rng = np.random.default_rng(args.seed + 1)
+        return list(np.cumsum(rng.exponential(1.0 / args.open_loop_rate,
+                                              args.requests)))
+
+    serve_kw = {}
+    arr = arrivals()
+    if arr is not None:
+        serve_kw["arrival_times"] = arr
+        print(f"open loop: Poisson arrivals at {args.open_loop_rate:g} "
+              f"req/s over {arr[-1]:.2f}s")
+
     print(f"arch={cfg.name} baseline top-k={cfg.moe_top_k or 'n/a'} "
           f"layout={eng.kv.layout} chunk={eng.prefill_chunk or 'whole'} "
           f"experts={args.expert_dtype}")
-    eng.serve(reqs)
+    eng.serve(reqs, **serve_kw)
     tput = _report("baseline", eng)
 
     plan = None
@@ -152,7 +172,7 @@ def main() -> int:
         eng.add_plan("lexi", plan)      # same runner, same weights
         print(f"LExI plan (B={plan.budget}): {plan.plan}")
         reqs = synth_requests(args.requests, cfg.vocab_size, **req_kw)
-        eng.serve(reqs, plan="lexi")
+        eng.serve(reqs, plan="lexi", **serve_kw)
         tput2 = _report("LExI", eng)
         print(f"speedup: {tput2 / tput:.2f}x at "
               f"{plan.active_fraction():.0%} active experts")

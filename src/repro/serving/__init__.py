@@ -1,3 +1,4 @@
+from repro.serving.clock import Clock, VirtualClock, WallClock  # noqa: F401
 from repro.serving.engine import Engine  # noqa: F401
 from repro.serving.kv_cache import KVCache  # noqa: F401
 from repro.serving.prefix_cache import PrefixIndex  # noqa: F401

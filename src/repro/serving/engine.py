@@ -23,6 +23,18 @@ re-prefilled (prompt + generated-so-far) and resumed token-exactly when
 pages free up.  ``preemption=False`` restores whole-lifetime reservation
 (admission takes prompt + max_new up front; nothing is ever evicted).
 
+The engine loop is **continuous and arrival-aware** (DESIGN.md §9):
+``submit(req, arrival_time=)`` enqueues a request onto a time-ordered
+arrival queue, ``step()`` releases due arrivals and advances every live
+slot one iteration (returning any requests that completed *that step*),
+and ``drain()`` steps until the system is empty.  Requests therefore
+enter while others are mid-prefill or mid-decode, stream incrementally,
+and complete individually -- the open-loop serving regime.  Time comes
+from one injected clock: the monotonic wall clock by default, or a
+deterministic ``VirtualClock`` (one tick per step) so tests can script
+arrival patterns exactly.  ``serve(reqs)`` survives as a thin
+closed-loop wrapper: submit everything at t=now, drain, report.
+
 ``Engine(cfg, params).serve(reqs)`` is unchanged from the monolith it
 replaced; ``serve(reqs, plan="name")`` after ``add_plan`` serves a LExI
 plan from the same runner and weights.
@@ -30,7 +42,7 @@ plan from the same runner and weights.
 
 from __future__ import annotations
 
-import time
+import heapq
 from dataclasses import replace
 from typing import Dict, List, Optional, Sequence
 
@@ -42,6 +54,7 @@ from repro import models
 from repro.configs.base import ModelConfig
 from repro.models.attention import cache_buf_len
 from repro.models.opts import DEFAULT_OPTS, ModelOpts
+from repro.serving.clock import Clock, WallClock
 from repro.serving.kv_cache import KVCache
 from repro.serving.request import Request, Result
 from repro.serving.runner import BASE_PLAN, ModelRunner
@@ -71,13 +84,19 @@ class Engine:
                  prefix_cache: bool = False,
                  scheduler: str = "fifo", truncate_prompts: bool = False,
                  eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
-                 mesh=None, seed: int = 0):
+                 clock: Optional[Clock] = None, mesh=None, seed: int = 0):
         self.max_batch = max_batch
         self.max_len = max_len
         self.prefill_pad = prefill_pad
+        # engine-wide *default* stop token: a Request.eos_id overrides it
+        # per request, so requests with different stop tokens share a batch
         self.eos_id = eos_id
         self.truncate_prompts = truncate_prompts
         self.key = jax.random.PRNGKey(seed)
+        # one clock seam for every latency interval (engine + scheduler):
+        # monotonic perf_counter by default, VirtualClock for
+        # deterministic arrival-pattern tests (one tick per engine step)
+        self.clock = clock if clock is not None else WallClock()
 
         pageable = _supports_paging(cfg)
         if cache_layout is None:
@@ -181,7 +200,15 @@ class Engine:
                            num_pages=num_pages,
                            prefix_cache=self.prefix_cache)
         self.kv = KVCache(cfg, max_batch, max_len, **self._kv_kw)
-        self.sched = Scheduler(max_batch, policy=scheduler)
+        self.sched = Scheduler(max_batch, policy=scheduler,
+                               clock=self.clock)
+
+        # time-ordered arrival queue: requests submitted with a future
+        # arrival_time sit here until the clock reaches them, then enter
+        # the scheduler's WAITING set (open-loop mid-flight admission)
+        self._pending: List = []        # heap of (arrival_time, seq, Request)
+        self._pending_seq = 0
+        self._pending_uids: set = set()
 
         self.slot_pos = np.full(max_batch, -1, np.int32)    # next write pos
         self.slot_last = np.zeros(max_batch, np.int32)      # last sampled tok
@@ -221,7 +248,7 @@ class Engine:
         pool is drained between workloads, so reuse is safe otherwise)."""
         if name == self.plan_name:
             return
-        if not self.sched.done():
+        if not self.sched.done() or self._pending:
             raise RuntimeError("cannot switch plans with requests in flight")
         old_cfg = self.cfg
         self.plan_name = name
@@ -240,8 +267,32 @@ class Engine:
     # ------------------------------------------------------------------ #
     # Submission
     # ------------------------------------------------------------------ #
-    def _submit(self, req: Request) -> Tracked:
-        t = self.sched.submit(req)
+    def submit(self, req: Request, *,
+               arrival_time: Optional[float] = None) -> None:
+        """Enqueue a request for admission at ``arrival_time`` (clock
+        units; ``None`` = now).  The open-loop entry point: requests may
+        be submitted at any moment -- including while other requests are
+        mid-prefill or mid-decode -- and enter the scheduler when the
+        clock reaches their arrival time.  Validation (prompt length, KV
+        capacity) happens at release, producing a rejected ``Result``
+        rather than an exception."""
+        if req.uid in self._pending_uids or req.uid in self.sched._uids:
+            raise duplicate_uid_error(req.uid)
+        t = self.clock.now() if arrival_time is None else float(arrival_time)
+        heapq.heappush(self._pending, (t, self._pending_seq, req))
+        self._pending_seq += 1
+        self._pending_uids.add(req.uid)
+
+    def _release_arrivals(self) -> None:
+        """Move every due arrival into the scheduler (arrival order)."""
+        while self._pending and self._pending[0][0] <= self.clock.now():
+            t_arr, _, req = heapq.heappop(self._pending)
+            self._pending_uids.discard(req.uid)
+            self._submit(req, t_arrival=t_arr)
+
+    def _submit(self, req: Request,
+                t_arrival: Optional[float] = None) -> Tracked:
+        t = self.sched.submit(req, t_submit=t_arrival)
         limit = self.max_len - 1
         if t.prompt_len == 0:
             self.sched.reject(t, "rejected_empty_prompt")
@@ -359,6 +410,12 @@ class Engine:
         (the common all-greedy case skips the full-vocab sort entirely)."""
         return jnp.asarray(self.slot_topk) if self.slot_topk.any() else None
 
+    def _eos_of(self, t: Tracked) -> Optional[int]:
+        """Effective stop token: per-request override, engine default
+        otherwise -- checked per slot, so requests with different stop
+        tokens batch together."""
+        return t.req.eos_id if t.req.eos_id is not None else self.eos_id
+
     def _first_token(self, t: Tracked, tok: int) -> None:
         """Account the prefill-sampled token; it may already terminate."""
         if t.req.max_new_tokens <= 0:
@@ -369,7 +426,8 @@ class Engine:
             return
         self.sched.record_token(t, tok)
         self.slot_budget[t.slot] -= 1
-        done_eos = self.eos_id is not None and tok == self.eos_id
+        eos = self._eos_of(t)
+        done_eos = eos is not None and tok == eos
         if done_eos or self.slot_budget[t.slot] <= 0:
             self._finish(t, "eos" if done_eos else "length")
         else:
@@ -566,20 +624,26 @@ class Engine:
             # in the LRU (content intact) instead of the free list, so its
             # prefix stays reusable after release
             self._register_pages(t, int(self.slot_pos[t.slot]))
-            done_eos = self.eos_id is not None and tok == self.eos_id
+            eos = self._eos_of(t)
+            done_eos = eos is not None and tok == eos
             done_len = (self.slot_budget[t.slot] <= 0
                         or self.slot_pos[t.slot] >= self.max_len - 1)
             if done_eos or done_len:
                 self._finish(t, "eos" if done_eos else "length")
 
     def _abort(self, reason: str) -> None:
-        """Drain every live and queued request so a failed serve() cannot
-        wedge the engine: pages go back to the pool, slots clear, and the
-        finished records release their uid claims at the next serve()."""
+        """Drain every live, queued, and not-yet-arrived request so a
+        failed serve()/drain() cannot wedge the engine: pages go back to
+        the pool, slots clear, and the finished records release their uid
+        claims at the next serve()."""
         for t in [x for x in self.sched.slots if x is not None]:
             self._finish(t, reason)
         for t in list(self.sched.waiting):
             self.sched.reject(t, reason)
+        while self._pending:    # future arrivals reject without admission
+            _, _, req = heapq.heappop(self._pending)
+            self._pending_uids.discard(req.uid)
+            self.sched.reject(self.sched.submit(req), reason)
 
     def _step(self) -> None:
         self._admit()
@@ -595,10 +659,71 @@ class Engine:
     # ------------------------------------------------------------------ #
     # Public API
     # ------------------------------------------------------------------ #
+    def idle(self) -> bool:
+        """Nothing live, queued, or scheduled to arrive."""
+        return not self._pending and self.sched.done()
+
+    def reset_stats(self) -> None:
+        """Start a fresh workload: zero the throughput counters and drop
+        the previous workload's finished records (releasing their uid
+        claims).  Refused while requests are in flight -- counters and
+        records mid-workload would be corrupted, not reset."""
+        if not self.idle():
+            raise RuntimeError("cannot reset stats with requests in flight")
+        self.stats = self._fresh_stats()
+        self.sched.clear_finished()
+
+    def step(self) -> List[Result]:
+        """One engine iteration: release due arrivals, admit, advance one
+        chunked-prefill step and one decode step, tick the clock.
+        Returns the requests that *completed this step* (possibly empty)
+        -- per-request completion never waits for the rest of the batch.
+        Non-blocking: an idle step (waiting on a future arrival) does no
+        work and returns immediately."""
+        n0 = len(self.sched.finished)
+        self._release_arrivals()
+        self._step()
+        self.clock.on_step()
+        return [t.result for t in self.sched.finished[n0:]]
+
+    def drain(self, *, max_steps: Optional[int] = None) -> List[Result]:
+        """Step until the system is empty (live slots, waiting queue, and
+        arrival queue all drained); returns every request completed during
+        the drain.  While nothing is runnable and the next arrival is in
+        the future, the clock idles toward it (a wall clock sleeps, a
+        virtual clock jumps -- idle simulated time is free).  ``max_steps``
+        bounds the engine-step loop (livelock guard): exceeding it aborts
+        every in-flight request and raises RuntimeError."""
+        out: List[Result] = []
+        n_steps = 0
+        while not self.idle():
+            if max_steps is not None and n_steps >= max_steps:
+                queued, live = (len(self.sched.waiting),
+                                sum(t is not None for t in self.sched.slots))
+                self._abort("aborted_max_steps")    # engine stays reusable
+                raise RuntimeError(
+                    f"drain() exceeded max_steps={max_steps}: "
+                    f"{queued} queued, {live} live "
+                    f"({self.stats['preemptions']} preemptions so far)")
+            if (self._pending and self.sched.done()
+                    and self._pending[0][0] > self.clock.now()):
+                self.clock.sleep_until(self._pending[0][0])
+            out.extend(self.step())
+            n_steps += 1
+        return out
+
     def serve(self, requests: Sequence[Request], *,
               plan: Optional[str] = None,
-              max_steps: Optional[int] = None) -> List[Result]:
+              max_steps: Optional[int] = None,
+              arrival_times: Optional[Sequence[float]] = None) -> List[Result]:
         """Run a full workload with continuous batching; returns all results.
+
+        A thin wrapper over ``submit`` + ``drain``: every request is
+        submitted up front -- at t=now (the closed-loop default, identical
+        to the historical batch call) or at ``now + arrival_times[i]``
+        (open-loop: per-request arrival offsets in clock units, e.g. a
+        Poisson process for the offered-load bench) -- and the engine
+        steps until all have completed.
 
         Throughput counters and latency percentiles are per-serve (reset at
         entry).  ``plan=`` selects a registered LExI specialization;
@@ -616,32 +741,25 @@ class Engine:
             seen = set()
             dup = next(u for u in uids if u in seen or seen.add(u))
             raise duplicate_uid_error(dup)
-        self.stats = self._fresh_stats()
-        self.sched.clear_finished()     # records (and uid claims) are
-        # per-workload: a long-lived engine must not accumulate them
-        batch = [self._submit(r) for r in requests]
-        t0 = time.time()
-        n_steps = 0
-        while not self.sched.done():
-            if max_steps is not None and n_steps >= max_steps:
-                queued, live = (len(self.sched.waiting),
-                                sum(t is not None for t in self.sched.slots))
-                self._abort("aborted_max_steps")    # engine stays reusable
-                raise RuntimeError(
-                    f"serve() exceeded max_steps={max_steps}: "
-                    f"{queued} queued, {live} live "
-                    f"({self.stats['preemptions']} preemptions so far)")
-            self._step()
-            n_steps += 1
-        self.stats["wall_s"] = time.time() - t0
+        if arrival_times is not None and len(arrival_times) != len(requests):
+            raise ValueError(f"{len(arrival_times)} arrival_times for "
+                             f"{len(requests)} requests")
+        self.reset_stats()      # records (and uid claims) are per-workload:
+        # a long-lived engine must not accumulate them
+        t0 = self.clock.now()
+        for i, r in enumerate(requests):
+            off = arrival_times[i] if arrival_times is not None else 0.0
+            self.submit(r, arrival_time=t0 + off)
+        self.drain(max_steps=max_steps)
+        self.stats["wall_s"] = max(self.clock.now() - t0, 0.0)
         # share of prefill-source positions served from cached pages (0.0
         # when nothing was prefilled at all, so the stat is always finite)
         hit = self.stats["prefix_hit_tokens"]
         denom = (hit + self.stats["prefill_tokens"]
                  + self.stats["recompute_tokens"])
         self.stats["prefix_hit_rate"] = hit / denom if denom else 0.0
-        self.stats.update(self.sched.percentiles(batch))
-        return sorted((t.result for t in batch), key=lambda r: r.uid)
+        self.stats.update(self.sched.percentiles())
+        return self.sched.results()
 
     def throughput(self) -> float:
         """Useful tokens (prompt + generated) per second over the last

@@ -17,6 +17,10 @@ class Request:
     #: sample only from the k highest-logit tokens (0 = no cap; ignored
     #: when temperature is 0 -- greedy is already the k=1 maximizer)
     top_k: int = 0
+    #: per-request stop token (None = the engine's default ``eos_id``);
+    #: checked per slot, so requests with different stop tokens -- or
+    #: none -- share a batch
+    eos_id: Optional[int] = None
     #: streaming callback, called as ``stream(uid, token)`` per new token
     stream: Optional[Callable[[int, int], None]] = None
 

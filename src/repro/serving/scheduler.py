@@ -1,13 +1,17 @@
 """Request scheduler: admission policy, lifecycle, and latency accounting.
 
 The scheduler is a pure policy object -- it never touches device arrays.
-It decides *which* waiting request is admitted next (``fifo`` preserves
-arrival order; ``sjf`` runs shortest-prompt-first, which removes the
-head-of-line blocking a single long prompt used to inflict on every short
-request queued behind it), tracks each request through
-WAITING -> PREFILL -> DECODE -> DONE, fires streaming callbacks, and
-accumulates per-request latency records (time-to-first-token, decode
-tokens/s) that ``percentiles()`` turns into the p50/p95 the engine reports.
+It decides *which* waiting request is admitted next (``fifo`` admits in
+arrival-time order -- WAITING carries each request's arrival timestamp,
+since open-loop serving feeds requests in mid-flight; ``sjf`` runs
+shortest-prompt-first, which removes the head-of-line blocking a single
+long prompt used to inflict on every short request queued behind it),
+tracks each request through WAITING -> PREFILL -> DECODE -> DONE, fires
+streaming callbacks, and accumulates per-request latency records
+(time-to-first-token, decode tokens/s) that ``percentiles()`` turns into
+the p50/p95 the engine reports.  All timestamps come from one injected
+``Clock`` (monotonic ``perf_counter`` by default, never wall
+``time.time()``; deterministic ``VirtualClock`` in tests).
 
 Preemption (DESIGN.md §6): when the engine's KV pool runs dry it evicts a
 victim through ``preempt``, which re-queues the request in a PREEMPTED
@@ -23,12 +27,12 @@ already streamed are never re-recorded).
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.clock import Clock, WallClock
 from repro.serving.request import Request, Result
 
 WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
@@ -41,9 +45,12 @@ def duplicate_uid_error(uid) -> ValueError:
         f"duplicate request uid {uid!r}: every request in a workload needs "
         "a unique uid (results and per-request stats are keyed by it)")
 
-#: name -> sort key over waiting requests (stable sort; ties stay FIFO)
+#: name -> sort key over waiting requests (stable sort; ties stay FIFO).
+#: fifo keys on the *arrival* time (``t_submit``): under open-loop
+#: serving requests enter WAITING mid-flight, so insertion order alone
+#: no longer encodes who arrived first after preemptions re-queue.
 POLICIES: Dict[str, Callable] = {
-    "fifo": lambda t: 0,
+    "fifo": lambda t: t.t_submit,
     "sjf": lambda t: len(t.req.prompt),
 }
 
@@ -74,10 +81,13 @@ class Tracked:
     chain: int = 0
     hashed_pages: int = 0
     hit_len: int = 0
+    #: arrival time (open-loop: when the request *entered*, which may be
+    #: long before admission); the -1 sentinels mean "never happened" --
+    #: 0.0 is a legitimate virtual-clock timestamp
     t_submit: float = 0.0
-    t_admit: float = 0.0       # first admission (preserved on resume)
-    t_first: float = 0.0       # first sampled token
-    t_done: float = 0.0
+    t_admit: float = -1.0      # first admission (preserved on resume)
+    t_first: float = -1.0      # first sampled token
+    t_done: float = -1.0
 
     @property
     def prompt_len(self) -> int:
@@ -97,10 +107,14 @@ class Tracked:
 
 
 class Scheduler:
-    def __init__(self, max_batch: int, policy: str = "fifo"):
+    def __init__(self, max_batch: int, policy: str = "fifo",
+                 clock: Optional[Clock] = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; have {sorted(POLICIES)}")
         self.policy = policy
+        #: all interval measurement goes through this seam (monotonic by
+        #: default; tests inject VirtualClock for deterministic latency)
+        self.clock = clock if clock is not None else WallClock()
         self.max_batch = max_batch
         self.waiting: List[Tracked] = []
         self.slots: List[Optional[Tracked]] = [None] * max_batch
@@ -111,7 +125,8 @@ class Scheduler:
     # ------------------------------------------------------------------ #
     # Submission / admission
     # ------------------------------------------------------------------ #
-    def submit(self, req: Request) -> Tracked:
+    def submit(self, req: Request,
+               t_submit: Optional[float] = None) -> Tracked:
         # results are keyed, sorted and stats-bucketed by uid, so a
         # duplicate would merge two requests' records nondeterministically
         # -- refuse it up front instead (records are per-workload: the
@@ -120,10 +135,15 @@ class Scheduler:
         if req.uid in self._uids:
             raise duplicate_uid_error(req.uid)
         self._uids.add(req.uid)
+        # t_submit is the request's *arrival* time: the engine passes the
+        # scheduled arrival for open-loop submissions, so queueing delay
+        # and TTFT measure from when the request entered the system, not
+        # from whichever engine step happened to release it
         t = Tracked(req=req, result=Result(uid=req.uid,
                                            prompt_len=len(req.prompt)),
                     prompt=np.asarray(req.prompt, np.int32),
-                    t_submit=time.time())
+                    t_submit=(self.clock.now() if t_submit is None
+                              else float(t_submit)))
         self.waiting.append(t)
         return t
 
@@ -135,12 +155,9 @@ class Scheduler:
         if t in self.waiting:
             self.waiting.remove(t)
         t.state = DONE
-        t.t_done = time.time()
+        t.t_done = self.clock.now()
         t.result.finished_reason = reason
-        if t.t_admit > 0.0:
-            t.result.queue_delay_s = t.t_admit - t.t_submit
-        if t.result.tokens:
-            t.result.ttft_s = t.t_first - t.t_submit
+        self._record_latency(t)
         self.finished.append(t)
 
     def free_slots(self) -> List[int]:
@@ -174,8 +191,8 @@ class Scheduler:
                 continue
             self.waiting.remove(t)
             t.state, t.slot = PREFILL, slot
-            if t.t_admit == 0.0:        # queue_delay_s: first admission only
-                t.t_admit = time.time()
+            if t.t_admit < 0.0:         # queue_delay_s: first admission only
+                t.t_admit = self.clock.now()
             t.admit_seq = self._admit_counter
             self._admit_counter += 1
             self.slots[slot] = t
@@ -208,22 +225,32 @@ class Scheduler:
     # ------------------------------------------------------------------ #
     def record_token(self, t: Tracked, token: int) -> None:
         if not t.result.tokens:
-            t.t_first = time.time()
+            t.t_first = self.clock.now()
         t.result.tokens.append(token)
         if t.req.stream is not None:
             t.req.stream(t.req.uid, token)
 
-    def finish(self, t: Tracked, reason: str) -> None:
-        t.state = DONE
-        t.t_done = time.time()
-        t.result.finished_reason = reason
-        if t.t_admit > 0.0:
-            t.result.queue_delay_s = t.t_admit - t.t_submit
+    def _record_latency(self, t: Tracked) -> None:
+        """Fill the result's latency fields from the timestamps.
+
+        Intervals clamp at zero: the default clock is monotonic so a
+        negative interval cannot arise from NTP steps anymore, but the
+        seam accepts arbitrary injected clocks and a latency stat must
+        never go negative regardless (regression-tested with a clock
+        that steps backwards mid-serve)."""
+        if t.t_admit >= 0.0:
+            t.result.queue_delay_s = max(t.t_admit - t.t_submit, 0.0)
         if t.result.tokens:
-            t.result.ttft_s = t.t_first - t.t_submit
+            t.result.ttft_s = max(t.t_first - t.t_submit, 0.0)
             if len(t.result.tokens) > 1:
                 t.result.decode_tps = ((len(t.result.tokens) - 1)
                                        / max(t.t_done - t.t_first, 1e-9))
+
+    def finish(self, t: Tracked, reason: str) -> None:
+        t.state = DONE
+        t.t_done = self.clock.now()
+        t.result.finished_reason = reason
+        self._record_latency(t)
         if 0 <= t.slot < self.max_batch:
             self.slots[t.slot] = None
         self.finished.append(t)

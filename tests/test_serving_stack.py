@@ -14,7 +14,7 @@ import pytest
 from repro import models
 from repro.configs import get_config
 from repro.core import LexiPlan, apply_plan_params, uniform_plan, validate_plan
-from repro.serving import Engine, KVCache, Request, Scheduler
+from repro.serving import Engine, KVCache, Request, Scheduler, VirtualClock
 
 
 def small_cfg(name="olmo-1b"):
@@ -871,3 +871,257 @@ class TestDuplicateUids:
         out = eng.serve([Request(uid=7, prompt=np.arange(4, dtype=np.int32),
                                  max_new_tokens=3)])
         assert [r.uid for r in out] == [7] and len(out[0].tokens) == 3
+
+    def test_pending_arrival_uid_collision_refused(self, setup):
+        """A uid already sitting in the arrival queue is a collision for
+        submit(), and an in-flight uid is a collision for a later
+        arrival."""
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4,
+                     clock=VirtualClock())
+        eng.submit(Request(uid=3, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=2),
+                   arrival_time=eng.clock.now() + 50)
+        with pytest.raises(ValueError, match="duplicate request uid"):
+            eng.submit(Request(uid=3, prompt=np.arange(5, dtype=np.int32)))
+        eng.drain()
+
+
+class TestOpenLoop:
+    """submit/step/drain: the continuous, arrival-aware engine loop."""
+
+    def _engine(self, cfg, params, **kw):
+        kw.setdefault("max_batch", 2)
+        kw.setdefault("max_len", 64)
+        kw.setdefault("prefill_chunk", 4)
+        return Engine(cfg, params, clock=VirtualClock(), **kw)
+
+    def test_serve_equals_submit_all_plus_drain(self, setup):
+        """serve(reqs) is exactly submit-all-at-t-now + drain."""
+        cfg, params = setup
+        closed = self._engine(cfg, params)
+        ref = [r.tokens for r in closed.serve(mixed_requests(cfg.vocab_size))]
+
+        eng = self._engine(cfg, params)
+        eng.reset_stats()
+        now = eng.clock.now()
+        for r in mixed_requests(cfg.vocab_size):
+            eng.submit(r, arrival_time=now)
+        out = eng.drain()
+        assert sorted((r.uid, tuple(r.tokens)) for r in out) \
+            == [(i, tuple(t)) for i, t in enumerate(ref)]
+        assert eng.idle()
+
+    def test_midflight_arrival_admitted_and_token_exact(self, setup):
+        """A request submitted after decode has begun is admitted into the
+        running batch, completes, and matches its solo-serve tokens; the
+        earlier request's completion does not wait for it."""
+        cfg, params = setup
+        rng = np.random.default_rng(5)
+        pa = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+        pb = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+
+        solo = self._engine(cfg, params)
+        ref_a = solo.serve([Request(uid=0, prompt=pa,
+                                    max_new_tokens=12)])[0].tokens
+        ref_b = solo.serve([Request(uid=1, prompt=pb,
+                                    max_new_tokens=4)])[0].tokens
+
+        eng = self._engine(cfg, params)
+        eng.reset_stats()
+        now = eng.clock.now()
+        eng.submit(Request(uid=0, prompt=pa, max_new_tokens=12),
+                   arrival_time=now)
+        # prompt 6 / chunk 4 = 2 prefill steps: by tick 6 request 0 is
+        # decoding, so request 1 arrives genuinely mid-decode
+        eng.submit(Request(uid=1, prompt=pb, max_new_tokens=4),
+                   arrival_time=now + 6.0)
+        done_at = {}
+        from repro.serving.scheduler import DECODE
+        decoding_when_b_arrived = None
+        while not eng.idle():
+            was_decoding = bool(eng.sched.in_state(DECODE))
+            for res in eng.step():
+                done_at[res.uid] = eng.clock.now()
+            if decoding_when_b_arrived is None and not eng._pending:
+                decoding_when_b_arrived = was_decoding
+        assert decoding_when_b_arrived        # 0 was mid-decode at release
+        assert eng.stats["live_peak"] == 2    # they really overlapped
+        out = {r.uid: r for r in eng.sched.results()}
+        assert out[0].tokens == ref_a
+        assert out[1].tokens == ref_b
+        # per-request completion: 0 (12 tokens from t=0) finishes after 1
+        # (4 tokens from t=6) under the virtual step clock, and neither
+        # waits for a batch barrier
+        assert done_at[1] < done_at[0]
+
+    def test_virtual_clock_latency_deterministic(self, setup):
+        """Latency stats under the virtual clock are exact step counts:
+        arrival at t=3, admission the same step (queue delay 0), first
+        token after the 2-step chunked prefill (TTFT 1), one decode token
+        per step thereafter (decode_tps 1)."""
+        cfg, params = setup
+        eng = self._engine(cfg, params)
+        out = eng.serve([Request(uid=0,
+                                 prompt=np.arange(6, dtype=np.int32),
+                                 max_new_tokens=3)],
+                        arrival_times=[3.0])
+        r = out[0]
+        assert r.queue_delay_s == 0.0
+        assert r.ttft_s == 1.0                  # 2 prefill steps, 1 tick
+        # each engine step runs prefill then decode, so the step that
+        # samples the first token also decodes the second: 2 decode
+        # tokens across 1 tick (t_first=4, t_done=5)
+        assert r.decode_tps == pytest.approx(2.0)
+        assert eng.stats["steps"] == 2          # 2 decode-phase steps
+
+    def test_preempted_outranks_later_arrival(self):
+        """A PREEMPTED request must re-admit ahead of any later arrival,
+        even when the policy (sjf) would prefer the newcomer."""
+        from repro.serving import VirtualClock as VC
+        from repro.serving.scheduler import PREEMPTED
+        s = Scheduler(max_batch=1, policy="sjf", clock=VC())
+        a = s.submit(Request(uid=0, prompt=np.zeros(8, np.int32)),
+                     t_submit=0.0)
+        s.admit(lambda slot, t: True)
+        s.record_token(a, 1)
+        s.preempt(a)
+        assert a.state == PREEMPTED
+        c = s.submit(Request(uid=1, prompt=np.zeros(2, np.int32)),
+                     t_submit=5.0)              # later, and shorter (sjf)
+        admitted = s.admit(lambda slot, t: True)
+        assert admitted == [a]                  # preempted wins anyway
+        assert c in s.waiting
+
+    def test_fifo_admits_by_arrival_time(self):
+        """WAITING carries the arrival time: fifo admission follows it,
+        not the order requests happened to be released into the queue."""
+        from repro.serving import VirtualClock as VC
+        s = Scheduler(max_batch=2, clock=VC())
+        late = s.submit(Request(uid=0, prompt=np.zeros(4, np.int32)),
+                        t_submit=9.0)
+        early = s.submit(Request(uid=1, prompt=np.zeros(4, np.int32)),
+                         t_submit=2.0)
+        admitted = s.admit(lambda slot, t: True)
+        assert admitted == [early, late]
+        assert early.admit_seq < late.admit_seq
+
+
+class TestPerRequestEos:
+    """Request.eos_id: per-slot stop tokens (the engine value is only a
+    default), so mixed-eos batches are legal and byte-identical to solo
+    serves."""
+
+    def _reqs(self, vocab, eos=(None, None, None), max_new=6):
+        rng = np.random.default_rng(4)
+        return [Request(uid=i,
+                        prompt=rng.integers(0, vocab, 5 + 3 * i)
+                        .astype(np.int32),
+                        max_new_tokens=max_new, eos_id=e)
+                for i, e in enumerate(eos)]
+
+    def test_mixed_eos_batch_byte_identical_to_solo(self, setup):
+        """Three requests with three different stop conditions (two
+        distinct per-request eos ids + one engine-default-only) share a
+        batch; each matches its solo serve exactly."""
+        cfg, params = setup
+        ekw = dict(max_batch=3, max_len=64, prefill_chunk=4)
+        probe = Engine(cfg, params, **ekw).serve(self._reqs(cfg.vocab_size))
+        # stop tokens chosen from each request's own greedy stream so the
+        # eos actually fires mid-stream
+        eos_a = int(probe[0].tokens[2])
+        eos_b = int(probe[1].tokens[3])
+        eos_default = int(probe[2].tokens[4])
+        if eos_b == eos_a:                      # tiny-vocab collision
+            eos_b = int(probe[1].tokens[1])
+
+        mixed = Engine(cfg, params, eos_id=eos_default, **ekw)
+        out = mixed.serve(self._reqs(cfg.vocab_size,
+                                     eos=(eos_a, eos_b, None)))
+        for i, (req_eos, eng_eos) in enumerate(
+                ((eos_a, None), (eos_b, None), (None, eos_default))):
+            solo = Engine(cfg, params, eos_id=eng_eos, **ekw)
+            ref = solo.serve([self._reqs(cfg.vocab_size,
+                                         eos=(req_eos,) * 3)[i]])
+            assert out[i].tokens == ref[0].tokens, f"uid {i}"
+            assert out[i].finished_reason == ref[0].finished_reason
+        # the per-request ids really cut the streams short
+        assert out[0].tokens[-1] == eos_a and len(out[0].tokens) <= 3
+        assert out[1].tokens[-1] == eos_b
+        assert out[2].finished_reason in ("eos", "length")
+
+    def test_request_eos_overrides_engine_default(self, setup):
+        """A request's own eos_id wins over the engine default, including
+        when the engine default would have fired earlier."""
+        cfg, params = setup
+        ekw = dict(max_batch=1, max_len=64, prefill_chunk=4)
+        probe = Engine(cfg, params, **ekw).serve(
+            self._reqs(cfg.vocab_size)[:1])
+        toks = probe[0].tokens
+        early = int(toks[0])        # an honored default stops immediately
+        late = next((int(t) for t in toks if t != early), None)
+        if late is None:
+            pytest.skip("degenerate greedy stream: all tokens identical")
+        eng = Engine(cfg, params, eos_id=early, **ekw)
+        req = self._reqs(cfg.vocab_size, eos=(late,) * 3)[0]
+        out = eng.serve([req])
+        # the engine default (early) is ignored for this request
+        assert len(out[0].tokens) > 1
+        assert out[0].tokens == toks[:toks.index(late) + 1]
+        assert out[0].finished_reason == "eos"
+
+
+class TestClockSeam:
+    """One injected clock times everything; intervals never go negative."""
+
+    def test_default_clock_is_monotonic(self, setup):
+        """The engine and scheduler share one WallClock reading
+        perf_counter -- never wall time, which steps under NTP."""
+        from repro.serving import WallClock
+        cfg, params = setup
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4)
+        assert isinstance(eng.clock, WallClock)
+        assert eng.sched.clock is eng.clock
+
+    def test_backwards_clock_step_keeps_latency_non_negative(self, setup):
+        """Regression (the time.time() bug): a clock stepping backwards
+        mid-serve -- as NTP could before the monotonic seam -- must not
+        produce negative TTFT / queue delay / wall_s.  A hostile clock is
+        injected and knocked back 1000 units by the first streamed token;
+        every latency stat must come out non-negative and finite."""
+        import math
+        from repro.serving.clock import Clock
+
+        class BrokenClock(Clock):
+            def __init__(self):
+                self.t = 0.0
+
+            def now(self):
+                return self.t
+
+            def on_step(self):
+                self.t += 1.0
+
+        cfg, params = setup
+        clk = BrokenClock()
+        eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4,
+                     clock=clk)
+        knocked = []
+
+        def knock_back(uid, tok):
+            if not knocked:
+                clk.t -= 1000.0
+                knocked.append(True)
+
+        reqs = [Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                        max_new_tokens=4, stream=knock_back),
+                Request(uid=1, prompt=np.arange(9, dtype=np.int32),
+                        max_new_tokens=4)]
+        out = eng.serve(reqs)
+        assert knocked                          # the step really happened
+        for r in out:
+            assert r.ttft_s >= 0.0
+            assert r.queue_delay_s >= 0.0
+            assert r.decode_tps >= 0.0
+        assert eng.stats["wall_s"] >= 0.0
+        assert all(math.isfinite(v) for v in eng.stats.values())

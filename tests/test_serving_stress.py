@@ -3,7 +3,8 @@ KV pool pressure (DESIGN.md §6).
 
 Hypothesis-driven fuzz over (prompt lengths, max_new, EOS timing, batch
 size, page size, pool size down to the prompt-only minimum, fifo/sjf,
-LExI plan on/off).  Every workload is checked against three invariants:
+LExI plan on/off, and -- in TestArrivalStress -- drawn arrival offsets
+on a virtual clock).  Every workload is checked against three invariants:
 
 1. **Oracle equivalence** -- per-request tokens (and finish reasons) are
    byte-identical to an engine with an unlimited pool; requests whose
@@ -38,8 +39,11 @@ from hypothesis import strategies as st
 from repro import models
 from repro.configs import get_config
 from repro.core import uniform_plan
-from repro.serving import Engine, Request
+from repro.serving import Engine, Request, VirtualClock
 
+# profiles: "dev" fuzzes deeper locally; anything else (including the
+# explicit HYPOTHESIS_PROFILE=ci that tier-1 CI exports) gets the
+# bounded, derandomized settings
 _SETTINGS = (dict(max_examples=40, deadline=None)
              if os.environ.get("HYPOTHESIS_PROFILE") == "dev"
              else dict(max_examples=10, deadline=None, derandomize=True))
@@ -85,19 +89,24 @@ def _setup():
 
 
 def _engine(batch, page_size=8, pool_idx=3, policy="fifo",
-            prefix_cache=False):
+            prefix_cache=False, virtual=False):
     """One cached engine per configuration key: examples reuse compiled
     graphs, and reusing uids across serves is the supported pattern.
     A cached prefix_cache engine also carries its page index across
-    examples -- deliberately: cross-serve reuse must stay byte-exact."""
+    examples -- deliberately: cross-serve reuse must stay byte-exact.
+    ``virtual=True`` engines run on a VirtualClock (one tick per step)
+    so drawn arrival offsets are deterministic; the clock keeps counting
+    across examples, which serve() tolerates (all latency math is
+    relative to the serve's own t0)."""
     cfg = _setup()
-    key = (batch, page_size, pool_idx, policy, prefix_cache)
+    key = (batch, page_size, pool_idx, policy, prefix_cache, virtual)
     if key not in _STATE["engines"]:
         eng = Engine(cfg, _STATE["params"], max_batch=batch,
                      max_len=MAX_LEN, prefill_chunk=CHUNK,
                      cache_layout="paged", page_size=page_size,
                      num_pages=_pool_options(page_size)[pool_idx],
-                     scheduler=policy, prefix_cache=prefix_cache)
+                     scheduler=policy, prefix_cache=prefix_cache,
+                     clock=VirtualClock() if virtual else None)
         eng.add_plan("lexi", _STATE["plan"])
         _STATE["engines"][key] = eng
     return _STATE["engines"][key]
@@ -275,6 +284,77 @@ class TestPrefixCacheStress:
         assert 0.0 <= eng.stats["prefix_hit_rate"] <= 1.0
         assert all(math.isfinite(v) for v in eng.stats.values())
         assert eng.stats["cow_copies"] == sum(r.cow_copies for r in out)
+
+
+class TestArrivalStress:
+    @settings(**_SETTINGS)
+    @given(st.integers(0, len(PAGE_SIZES) - 1),    # page size
+           st.integers(0, 3),                      # pool tightness
+           st.integers(0, 1),                      # fifo / sjf
+           st.integers(2, 3),                      # max_batch
+           st.integers(2, 6),                      # request count
+           st.booleans(),                          # LExI plan on/off
+           st.integers(0, 10**6))                  # workload seed
+    def test_open_loop_arrivals_match_closed_loop(self, page_idx, pool_idx,
+                                                  policy_idx, batch, n_req,
+                                                  plan_on, seed):
+        """Open-loop serves (drawn arrival offsets on a virtual clock) are
+        byte-identical to the closed-loop all-at-t=0 unlimited-pool oracle:
+        greedy decoding is batch-composition independent, so WHEN a request
+        joins the batch must never change WHAT it generates -- through any
+        interleaving of mid-flight admissions, pool pressure and
+        preemption.  Also pins arrival-FIFO admission order and the usual
+        pool/uid drain invariants."""
+        cfg = _setup()
+        page_size = PAGE_SIZES[page_idx]
+        plan_kw = {"plan": "lexi"} if plan_on else {}
+        rng = np.random.default_rng(seed ^ 0x5EED)
+        # deliberately unsorted: submit() must order arrivals itself
+        offsets = [float(t) for t in rng.integers(0, 40, n_req)]
+
+        oracle = _engine(batch)
+        oracle.eos_id = None
+        ref = oracle.serve(_workload(cfg.vocab_size, n_req, seed),
+                           max_steps=STEP_BOUND, **plan_kw)
+
+        eng = _engine(batch, page_size, pool_idx, POLICIES[policy_idx],
+                      virtual=True)
+        eng.eos_id = None
+        streams = {}
+        out = eng.serve(_workload(cfg.vocab_size, n_req, seed, streams),
+                        max_steps=STEP_BOUND, arrival_times=offsets,
+                        **plan_kw)
+
+        usable = eng.kv.num_pages - 1
+        for r, ro in zip(out, ref):
+            if r.finished_reason == "rejected_kv_capacity":
+                continue        # worst-case need > pool (checked elsewhere)
+            assert r.tokens == ro.tokens, f"uid {r.uid} diverged"
+            assert r.finished_reason == ro.finished_reason, f"uid {r.uid}"
+            assert streams[r.uid] == r.tokens, f"uid {r.uid} stream"
+
+        # arrival-FIFO: first admission never reorders a strictly-later
+        # arrival ahead of an earlier one (preemption resumes overwrite
+        # nothing -- t_admit is first-admission -- but a preempted slot can
+        # legitimately delay a later arrival, so only assert on the
+        # unlimited pool where no preemption happens)
+        if POLICIES[policy_idx] == "fifo" and pool_idx == 3:
+            admitted = sorted((t for t in eng.sched.finished
+                               if t.t_admit >= 0.0),
+                              key=lambda t: (t.t_submit, t.req.uid))
+            for a, b in zip(admitted, admitted[1:]):
+                if a.t_submit < b.t_submit:
+                    assert a.t_admit <= b.t_admit, (
+                        f"uid {b.req.uid} (arrived {b.t_submit}) admitted "
+                        f"before uid {a.req.uid} (arrived {a.t_submit})")
+
+        # pool and uid claims fully drain; the engine is reusable
+        assert eng.kv.stats["pages_in_use"] == 0
+        assert eng.kv.free_pages() == usable
+        assert eng.sched.done() and eng.idle()
+        eng.sched.clear_finished()
+        assert not eng.sched._uids
+        assert all(math.isfinite(v) for v in eng.stats.values())
 
 
 class TestPoolPressureAcceptance:
