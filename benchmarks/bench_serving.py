@@ -34,6 +34,12 @@ capacity: goodput (completed tok/s over the makespan) and TTFT p50/p95
 per load point -- the arrival-queue blow-up past capacity is the curve
 closed-loop cells cannot show.
 
+Per-request plans (DESIGN.md §10) get two cells: a mixed-plan wave
+(alternating base/lexi on the fused engine, served by the bucketed-k
+graphs) in the main grid, and a ``plan_pareto`` ablation pitting static
+single-plan serves against the pressure-adaptive degradation ladder on
+the quality (eval xent) vs completed-tok/s plane.
+
 Every cell is measured as an **interleaved median**: one warmup serve per
 cell (compile), then serve rounds interleaved across all cells and the
 per-cell median wall time reported.  The previous single-serve cells swung
@@ -76,11 +82,20 @@ def _interleaved_serves(cells, vocab: int, n_req: int, *, reps: int,
     tok/s counts useful (completed) tokens only: ``prefill_tokens`` +
     ``decode_tokens``, with preemption recompute accounted separately.
     ``make_requests`` overrides the default workload factory.
+
+    A *tuple/list* plan stamps its names round-robin onto the requests
+    (``Request.plan``) instead of passing ``serve(plan=)`` -- the mixed
+    per-request-plan cell, served through the bucketed-k graphs.
     """
     def one(eng, plan):
-        kw = {} if plan is None else {"plan": plan}
         reqs = (make_requests() if make_requests is not None
                 else _requests(vocab, n_req))
+        if isinstance(plan, (tuple, list)):
+            for i, r in enumerate(reqs):
+                r.plan = plan[i % len(plan)]
+            kw = {}
+        else:
+            kw = {} if plan is None else {"plan": plan}
         eng.serve(reqs, **kw)
         return eng.stats
 
@@ -483,6 +498,153 @@ def _open_loop_ablation(cfg, params, csv: CSV, *, fast: bool) -> dict:
     return abl
 
 
+def _plan_pareto_ablation(cfg, params, dc, csv: CSV, *, fast: bool) -> dict:
+    """Static plan ladder vs pressure-adaptive degradation on the
+    quality/throughput plane (DESIGN.md §10).
+
+    Every request *asks* for the base plan; the question is what the
+    engine should serve when the queue is longer than the batch.  Static
+    points pin one plan for the whole serve (base, the dp ladder rung,
+    and uniform-half -- the layer-adaptivity ablation at the paper's 50%
+    budget).  The adaptive cell declares the ladder ``base -> dp`` with
+    ``degrade_under_pressure=True``: admissions under queue pressure drop
+    one rung at the prefill boundary, the drained tail still gets base.
+
+    Quality is the eval xent of each plan on a held-out batch (the
+    fig4 proxy); the adaptive cell's quality is the *token-weighted* mix
+    of its rung xents using the per-plan decode-token stats -- tokens the
+    engine actually served under each rung.  Throughput is completed
+    tok/s under queue pressure (n_req >> max_batch), interleaved-median
+    like every serving cell.  The dp rung is chosen off a small budget
+    sweep as the *cheapest* dp plan whose solo xent clears uniform-half
+    (recorded as ``dp_rung_frontier``): layer-adaptive allocation below
+    the 50% budget -- where uniform plans do not even exist -- is what
+    lets the adaptive mix undercut uniform-half's cost while beating its
+    quality; the dominance record checks exactly that, per static point.
+    """
+    import jax
+
+    from repro import models
+    from repro.core import (apply_plan_params, optimize,
+                            profile_sensitivity, uniform_plan)
+    from repro.data import sample_batch
+
+    n = cfg.num_moe_layers
+    full = n * cfg.moe_top_k
+    half = full // 2
+    uhalf = uniform_plan(cfg, max(1, cfg.moe_top_k // 2))
+
+    batch = sample_batch(dc, 424_242)
+
+    def xent_of(plan_obj):
+        # a non-uniform plan changes the layer grouping, so the stacked
+        # params must be re-sliced to match (same weights, new views)
+        cfg_, p_ = ((cfg, params) if plan_obj is None
+                    else apply_plan_params(params, cfg, plan_obj))
+        return float(jax.jit(
+            lambda p, b: models.loss_fn(p, cfg_, b)[1]["xent"])(p_, batch))
+
+    xent = {"base": xent_of(None), "uniform_half": xent_of(uhalf)}
+
+    # the ladder's cheap rung: the *cheapest* dp plan whose solo quality
+    # still clears the uniform-half bar -- layer-adaptive allocation
+    # below the 50% budget is what gives the adaptive mix room to match
+    # uniform-half's cost while beating its quality (LExI's claim, on
+    # the budget axis where uniform plans do not even exist)
+    table = profile_sensitivity(params, cfg, n_iter=8 if fast else 12,
+                                batch=2, seq=32)
+    frontier, dp = {}, None
+    for b in range(max(n, half // 2), half + 1):
+        cand = optimize(params, cfg, b, method="dp", table=table)
+        frontier[b] = {"plan": list(cand.plan),
+                       "xent": round(xent_of(cand), 4)}
+        if dp is None and frontier[b]["xent"] <= xent["uniform_half"]:
+            dp = cand
+    if dp is None:                      # no sub-half rung clears the bar
+        dp = optimize(params, cfg, half, method="dp", table=table)
+        if half not in frontier:
+            frontier[half] = {"plan": list(dp.plan),
+                              "xent": round(xent_of(dp), 4)}
+    rung_budget = dp.budget
+    xent["dp"] = frontier[rung_budget]["xent"]
+    plans = {"base": (cfg.moe_top_k,) * n,
+             "dp": tuple(dp.plan),
+             "uniform_half": tuple(uhalf.plan)}
+
+    # n_req >> max_batch: only the drained tail (the last couple of
+    # admissions, when the queue no longer outnumbers free slots) keeps
+    # base, so the adaptive mix's average budget sits below uniform-half
+    max_batch = 2
+    n_req = 24
+    max_new = 16
+    ekw = dict(max_batch=max_batch, max_len=96, prefill_pad=16,
+               cache_layout="paged", page_size=8, use_moe_decode=True)
+
+    def mk_engine(**kw):
+        e = Engine(cfg, params, **ekw, **kw)
+        e.add_plan("dp", dp)
+        e.add_plan("uniform_half", plans["uniform_half"])
+        return e
+
+    eng_static = mk_engine()
+    eng_adapt = mk_engine(degrade_under_pressure=True)
+    eng_adapt.set_plan_ladder(("base", "dp"))
+
+    def make_requests():
+        rng = np.random.default_rng(7)
+        return [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            6 + 3 * (i % 4)).astype(np.int32),
+                        max_new_tokens=max_new)
+                for i in range(n_req)]
+
+    cells = {"static_base": (eng_static, None),
+             "static_dp": (eng_static, "dp"),
+             "static_uniform_half": (eng_static, "uniform_half"),
+             "adaptive": (eng_adapt, None)}
+    measured = _interleaved_serves(cells, cfg.vocab_size, n_req,
+                                   reps=2 if fast else 4,
+                                   make_requests=make_requests)
+
+    astats = measured["adaptive"][1]
+    rung_toks = {name: astats.get(f"plan_decode_tokens:{name}", 0.0)
+                 for name in plans}
+    total = sum(rung_toks.values()) or 1.0
+    adaptive_xent = sum(xent[name] * t
+                        for name, t in rung_toks.items()) / total
+
+    abl = {"method": "static plan per cell vs ladder base->dp with "
+                     "degrade_under_pressure, queue pressure "
+                     f"(n_req={n_req} >> max_batch={max_batch}); quality "
+                     "= eval xent, adaptive = token-weighted rung mix",
+           "plans": {name: list(ks) for name, ks in plans.items()},
+           "budgets": {"full": full, "dp_rung": rung_budget,
+                       "uniform_half": sum(plans["uniform_half"])},
+           "dp_rung_frontier": {str(b): v for b, v in frontier.items()},
+           "xent": {name: round(v, 4) for name, v in xent.items()},
+           "cells": {}, "dominates": {}}
+    for name, (tput, stats, med_wall) in measured.items():
+        cell_xent = (adaptive_xent if name == "adaptive"
+                     else xent[name[len("static_"):]])
+        abl["cells"][name] = {
+            "completed_tok_per_s": round(tput, 2),
+            "eval_xent": round(cell_xent, 4)}
+        if name == "adaptive":
+            abl["cells"][name].update({
+                "plan_degradations": int(stats.get("plan_degradations", 0)),
+                "decode_tokens_per_rung": {
+                    k: int(v) for k, v in rung_toks.items() if v}})
+        csv.add(f"serving/plan_pareto_{name}", med_wall * 1e6,
+                f"tok_per_s={tput:.1f};xent={cell_xent:.4f}")
+    a_tput = measured["adaptive"][0]
+    for point in ("static_base", "static_dp", "static_uniform_half"):
+        abl["dominates"][point] = bool(
+            a_tput >= measured[point][0]
+            and adaptive_xent <= xent[point[len("static_"):]] + 1e-9)
+    abl["dominates_any_static_point"] = any(abl["dominates"].values())
+    return abl
+
+
 def run(csv: CSV, *, fast: bool = False, expert_dtype: str = "int8") -> None:
     """``expert_dtype`` selects the quantized variant of the fused-decode
     engine measured against its full-precision twin (int8 by default;
@@ -522,6 +684,11 @@ def run(csv: CSV, *, fast: bool = False, expert_dtype: str = "int8") -> None:
         "paged_chunked_lexi": (eng_paged, "lexi"),
         "paged_chunked_moedecode": (eng_fused, None),
         "paged_chunked_lexi_moedecode": (eng_fused, "lexi"),
+        # per-request plans: alternate base/lexi across the same wave, so
+        # every decode step is a mixed batch served by the bucketed-k
+        # graphs (zero-weighted surplus slots) -- the overhead this cell
+        # measures is the price of heterogeneity itself
+        "paged_chunked_mixedplan_moedecode": (eng_fused, ("base", "lexi")),
     }
     if expert_dtype != "bf16":
         # fused-decode engine over quantized expert tiles (quantize-at-
@@ -581,6 +748,18 @@ def run(csv: CSV, *, fast: bool = False, expert_dtype: str = "int8") -> None:
     if qcell in tps:
         out["moe_decode"][f"{expert_dtype}_speedup_vs_native_fused"] = round(
             tps[qcell] / max(tps["paged_chunked_moedecode"], 1e-9), 3)
+    mp = "paged_chunked_mixedplan_moedecode"
+    mstats = measured[mp][1]
+    out["mixed_plan"] = {
+        # the half-lexi wave should land between the two homogeneous
+        # cells; mixed_plan_steps > 0 certifies the bucket graphs (not a
+        # homogeneous fallback) actually served it
+        "tok_per_s": tps[mp],
+        "vs_uniform_fused": round(
+            tps[mp] / max(tps["paged_chunked_moedecode"], 1e-9), 3),
+        "vs_lexi_fused": round(
+            tps[mp] / max(tps["paged_chunked_lexi_moedecode"], 1e-9), 3),
+        "mixed_plan_steps": int(mstats.get("mixed_plan_steps", 0))}
 
     # gather-vs-in-kernel paged decode: a table much wider than the live
     # context (the long-max_len serving regime paged attention exists
@@ -607,6 +786,11 @@ def run(csv: CSV, *, fast: bool = False, expert_dtype: str = "int8") -> None:
     # open-loop Poisson arrivals: goodput + TTFT tails across an offered-
     # load sweep around closed-loop capacity (DESIGN.md §9)
     out["open_loop"] = _open_loop_ablation(cfg, params, csv, fast=fast)
+
+    # static plan ladder vs pressure-adaptive degradation on the
+    # quality/throughput plane (DESIGN.md §10)
+    out["plan_pareto"] = _plan_pareto_ablation(cfg, params, dc, csv,
+                                               fast=fast)
 
     with open("BENCH_serving.json", "w") as f:
         json.dump(out, f, indent=1)

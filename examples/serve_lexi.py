@@ -37,6 +37,15 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share already-computed KV pages across requests "
                          "with a common prompt prefix (refcounted, COW)")
+    ap.add_argument("--plan-ladder", default=None, metavar="NAME,NAME,...",
+                    help="degradation ladder over registered plans, most "
+                         "expensive first (here: base,lexi); adds a third "
+                         "serve where every request *asks* for base but "
+                         "admissions under queue pressure drop one rung at "
+                         "the prefill boundary (DESIGN.md §10)")
+    ap.add_argument("--degrade-under-pressure", action="store_true",
+                    help="enable the ladder policy for the third serve "
+                         "(off = ladder declared but inert)")
     args = ap.parse_args()
 
     # -- train a small MoE so routing has real structure ------------------- #
@@ -71,7 +80,8 @@ def main():
     # -- ONE engine, one set of weights, two specializations ---------------- #
     eng = Engine(cfg, params, max_batch=4, max_len=128, prefill_pad=16,
                  num_pages=args.num_pages, preemption=args.preemption,
-                 expert_dtype=ed, prefix_cache=args.prefix_cache)
+                 expert_dtype=ed, prefix_cache=args.prefix_cache,
+                 degrade_under_pressure=args.degrade_under_pressure)
     eng.serve(reqs())
     base_tput = eng.throughput()
     base_ppl = ppl(params, cfg)
@@ -96,6 +106,22 @@ def main():
     print(f"-> {lexi_tput / base_tput:.2f}x throughput at "
           f"{plan.active_fraction():.0%} active experts, "
           f"ppl delta {lexi_ppl - base_ppl:+.3f}")
+
+    # -- pressure-adaptive degradation over the declared ladder ------------- #
+    if args.plan_ladder:
+        eng.set_plan_ladder(args.plan_ladder.split(","))
+        out = eng.serve(reqs())     # every request asks for base
+        print(f"\nladder {args.plan_ladder} "
+              f"(degrade_under_pressure={args.degrade_under_pressure}): "
+              f"{eng.throughput():8.1f} tok/s")
+        for name, d in sorted(eng.plan_stats().items()):
+            print(f"  plan {name:<8} requests="
+                  f"{int(d.get('plan_requests', 0)):3d}  decode_tokens="
+                  f"{int(d.get('plan_decode_tokens', 0))}")
+        degraded = [r for r in out if r.plan_degradations]
+        print(f"  {len(degraded)}/{len(out)} requests served below their "
+              f"requested plan ({int(eng.stats['plan_degradations'])} "
+              f"rung moves, always at the prefill boundary)")
 
 
 if __name__ == "__main__":

@@ -44,10 +44,17 @@ class BlockSpec:
 
     ``moe_top_k`` is carried per-layer so a LExI plan can vary it across depth;
     for non-MoE blocks it is 0.
+
+    ``split_id`` is a grouping tag: specs that differ only in ``split_id`` are
+    numerically identical but land in different scan groups.  Serving assigns a
+    unique id per layer so the KV-cache pytree has one entry per layer and is
+    therefore *independent* of the per-layer top-k — a requirement for serving
+    heterogeneous per-request plans against one cache (DESIGN.md §10).
     """
 
     kind: str
     moe_top_k: int = 0
+    split_id: int = 0
 
     def __post_init__(self):
         if self.kind not in BLOCK_KINDS:
@@ -196,7 +203,7 @@ class ModelConfig:
             for pos, k in zip(moe_positions, self.lexi_plan):
                 if not (1 <= k <= self.num_experts):
                     raise ValueError(f"plan k={k} out of range at layer {pos}")
-                pat[pos] = BlockSpec("attn_moe", int(k))
+                pat[pos] = replace(pat[pos], moe_top_k=int(k))
         return tuple(pat)
 
     def moe_layer_indices(self) -> Tuple[int, ...]:

@@ -7,9 +7,20 @@
     PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --reduced \
         --requests 16 --plan plan.json
 
+    # pressure-adaptive degradation: declare the ladder (expensive ->
+    # cheap) and let admissions under pool/queue pressure walk requests
+    # one rung down at the prefill boundary (DESIGN.md §10)
+    PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --reduced \
+        --requests 16 --max-batch 2 --lexi-budget-frac 0.5 \
+        --plan-ladder base,lexi --degrade-under-pressure
+
 Baseline and plan are served from ONE engine (one runner, one set of
 weights): the plan is registered as a named specialization and selected
-per workload, which is the paper's deployment story end to end.
+per workload, which is the paper's deployment story end to end.  The
+plan is a *per-request* attribute (``Request.plan``) -- ``serve(plan=)``
+just stamps it on the wave -- so heterogeneous-plan batches share a
+step through the bucketed-k graphs, and the report breaks requests and
+decode tokens down per served plan.
 """
 
 from __future__ import annotations
@@ -49,6 +60,19 @@ def _report(tag: str, eng: Engine) -> float:
           f"ttft_p50={s.get('ttft_p50_s', float('nan')) * 1e3:.0f}ms "
           f"ttft_p95={s.get('ttft_p95_s', float('nan')) * 1e3:.0f}ms "
           f"decode_tps_p50={s.get('decode_tps_p50', float('nan')):.1f})")
+    # per-plan breakdown, straight off the flat stats counters
+    per_plan = eng.plan_stats()
+    if len(per_plan) > 1 or s.get("plan_degradations"):
+        for name, d in sorted(per_plan.items()):
+            print(f"  plan {name:<10} requests="
+                  f"{int(d.get('plan_requests', 0)):3d}  decode_tokens="
+                  f"{int(d.get('plan_decode_tokens', 0))}")
+        if s.get("mixed_plan_steps"):
+            print(f"  mixed-plan steps (bucketed-k graphs): "
+                  f"{int(s['mixed_plan_steps'])}")
+        if s.get("plan_degradations"):
+            print(f"  plan degradations: {int(s['plan_degradations'])} "
+                  f"(rung moves, always at the prefill boundary)")
     return tput
 
 
@@ -111,6 +135,17 @@ def main() -> int:
                     help="path to a saved LexiPlan JSON to serve")
     ap.add_argument("--save-plan", default=None,
                     help="write the searched plan here for later --plan runs")
+    ap.add_argument("--plan-ladder", default=None, metavar="NAME,NAME,...",
+                    help="degradation ladder over registered plans, most "
+                         "expensive rung first (e.g. base,lexi with "
+                         "--lexi-budget-frac or --plan); adds a ladder "
+                         "serve where every request asks for base but "
+                         "admissions under KV-pool/queue pressure move "
+                         "non-priority requests one rung down, always at "
+                         "the prefill boundary (DESIGN.md §10)")
+    ap.add_argument("--degrade-under-pressure", action="store_true",
+                    help="enable the ladder policy (without it the ladder "
+                         "is declared but inert)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -132,7 +167,8 @@ def main() -> int:
                  expert_dtype=args.expert_dtype,
                  router_lookahead=args.router_lookahead or None,
                  prefix_cache=args.prefix_cache,
-                 scheduler=args.scheduler)
+                 scheduler=args.scheduler,
+                 degrade_under_pressure=args.degrade_under_pressure)
     def arrivals():
         if args.open_loop_rate <= 0:
             return None
@@ -176,6 +212,14 @@ def main() -> int:
         tput2 = _report("LExI", eng)
         print(f"speedup: {tput2 / tput:.2f}x at "
               f"{plan.active_fraction():.0%} active experts")
+
+    if args.plan_ladder:
+        ladder = args.plan_ladder.split(",")
+        eng.set_plan_ladder(ladder)     # raises on unregistered names
+        reqs = synth_requests(args.requests, cfg.vocab_size, **req_kw)
+        eng.serve(reqs, **serve_kw)     # every request asks for base
+        _report(f"ladder {'->'.join(ladder)}"
+                + ("" if args.degrade_under_pressure else " (inert)"), eng)
     return 0
 
 

@@ -90,6 +90,7 @@ def apply_block(
     block_tables=None,
     kernel_blocks: Optional[int] = None,
     lookahead_h2=None,
+    k_budget=None,
 ):
     """Returns (x, new_cache, aux_loss, h2).
 
@@ -98,6 +99,10 @@ def apply_block(
     on, and ``lookahead_h2`` is that carry: the *previous* layer's h2, from
     which this block predicts its top-k expert ids before its own
     attention output exists (DESIGN.md §7).
+
+    ``k_budget`` [B] i32 caps active experts per batch row below the
+    spec's static ``moe_top_k`` via exact zero-weighting in ``route``
+    (per-request LExI plans; DESIGN.md §10).
     """
     if mesh is not None and opts.act_constraint:
         # optionally pin activations to batch-over-data at block boundaries
@@ -149,6 +154,11 @@ def apply_block(
         impl = opts.moe_impl or cfg.moe_impl
         if mode == "decode" and impl == "ep_a2a":
             impl = "ep_psum"  # a2a dispatch is wrong shape regime for decode
+        kb_tok = None
+        if k_budget is not None:
+            b, s, _ = h2.shape
+            kb_tok = jnp.broadcast_to(
+                k_budget.astype(jnp.int32)[:, None], (b, s)).reshape(-1)
         y, aux = moe_mod.moe(params["moe"], cfg, h2, spec.moe_top_k,
                              impl=impl, mesh=mesh,
                              use_kernel=opts.use_moe_kernel,
@@ -156,7 +166,7 @@ def apply_block(
                              decode_kernel=(opts.use_moe_decode_kernel
                                             and mode == "decode"),
                              expert_dtype=opts.expert_dtype,
-                             pred_idx=pred_idx)
+                             pred_idx=pred_idx, k_budget=kb_tok)
         x = x + y
     else:
         x = x + mlp(params["mlp"], h2)
@@ -223,13 +233,22 @@ def apply_stack(
     opts: ModelOpts = DEFAULT_OPTS,
     block_tables=None,
     kernel_blocks: Optional[int] = None,
+    k_budgets=None,
 ):
-    """Run all layer groups.  Returns (x, new_caches, total_aux)."""
+    """Run all layer groups.  Returns (x, new_caches, total_aux).
+
+    ``k_budgets`` [B, n_moe] i32 gives each batch row a per-MoE-layer
+    active-expert cap below the pattern's static per-layer top-k
+    (per-request LExI plans, DESIGN.md §10).  Only single-layer groups can
+    carry budgets -- serving uses per-layer split patterns
+    (``BlockSpec.split_id``), which guarantee that.
+    """
     groups = group_pattern(cfg.pattern())
     total_aux = jnp.zeros((), jnp.float32)
     new_caches = []
     use_cache = caches is not None
     lookahead = opts.router_lookahead and mode == "decode"
+    moe_layer_i = 0  # running index into k_budgets' layer axis
     # Router lookahead carry: layer i-1's pre-FFN hidden, from which layer
     # i predicts its expert ids before its own attention runs.  Zeros feed
     # the first layer -- its staged loads just miss, which never changes
@@ -242,15 +261,26 @@ def apply_stack(
         if g.spec.kind == "shared_attn":
             gparams = params["shared_attn"]
         gl = lookahead and g.spec.kind != "mamba"
+        g_budget = None
+        if k_budgets is not None and g.spec.kind == "attn_moe":
+            if g.count != 1:
+                raise ValueError(
+                    "k_budgets requires single-layer MoE groups; use a "
+                    "per-layer split pattern (BlockSpec.split_id)")
+            g_budget = k_budgets[:, moe_layer_i]
+        if g.spec.kind == "attn_moe":
+            moe_layer_i += g.count
 
-        def one_layer(p_layer, xx, c_layer, h2_in=None, spec=g.spec):
+        def one_layer(p_layer, xx, c_layer, h2_in=None, spec=g.spec,
+                      kb=g_budget):
             fn = partial(apply_block, cfg=cfg, spec=spec, positions=positions,
                          mode=mode, mesh=mesh, opts=opts,
                          block_tables=block_tables,
                          kernel_blocks=kernel_blocks)
             if opts.remat != "none" and mode == "train":
                 fn = _remat(fn, opts)
-            return fn(p_layer, x=xx, cache=c_layer, lookahead_h2=h2_in)
+            return fn(p_layer, x=xx, cache=c_layer, lookahead_h2=h2_in,
+                      k_budget=kb)
 
         if g.count == 1:
             x, nc, aux, h2 = one_layer(gparams, x, gcache,

@@ -75,25 +75,26 @@ def prefill_fn(params, cfg: ModelConfig, batch, caches, *, mesh=None,
 
 def decode_fn(params, cfg: ModelConfig, tokens, pos, caches, *, mesh=None,
               opts: ModelOpts = DEFAULT_OPTS, block_tables=None,
-              kernel_blocks=None):
+              kernel_blocks=None, k_budgets=None):
     if cfg.is_encoder_decoder:
         return encdec_mod.encdec_decode_step(params, cfg, tokens, pos, caches,
                                              mesh=mesh, opts=opts)
     return tf_mod.decode_step(params, cfg, tokens, pos, caches,
                               mesh=mesh, opts=opts, block_tables=block_tables,
-                              kernel_blocks=kernel_blocks)
+                              kernel_blocks=kernel_blocks,
+                              k_budgets=k_budgets)
 
 
 def chunk_prefill_fn(params, cfg: ModelConfig, tokens, positions, caches, *,
                      last_index=None, block_tables=None, mesh=None,
-                     opts: ModelOpts = DEFAULT_OPTS):
+                     opts: ModelOpts = DEFAULT_OPTS, k_budgets=None):
     """One fixed-width chunked-prefill step (decoder-only LMs)."""
     if cfg.is_encoder_decoder:
         raise NotImplementedError("chunked prefill is decoder-only LM for now")
     return tf_mod.chunk_prefill(params, cfg, tokens, caches,
                                 positions=positions, last_index=last_index,
                                 block_tables=block_tables, mesh=mesh,
-                                opts=opts)
+                                opts=opts, k_budgets=k_budgets)
 
 
 # --------------------------------------------------------------------------- #

@@ -29,7 +29,8 @@ from repro.models.moe.router import route
 
 def moe_decode(params: Dict, cfg: ModelConfig, x2d, top_k: int,
                use_kernel: bool = False, *, expert_dtype: str = "bf16",
-               pred_idx=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+               pred_idx=None, k_budget=None,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x2d [T, D] -> (y2d [T, D], aux_loss).  Dropless; decode-shaped T.
 
     ``expert_dtype`` != "bf16" reads int8-stored expert tiles (plus their
@@ -37,9 +38,12 @@ def moe_decode(params: Dict, cfg: ModelConfig, x2d, top_k: int,
     router runs full precision either way.  ``pred_idx`` [T, k] is the
     router-lookahead hint: gather-path weight loads stage on it and
     hit-select against the true ids (DESIGN.md §7) -- outputs never
-    depend on it.
+    depend on it.  ``k_budget`` [T] zero-weights routed slots past each
+    token's budget; the fused kernel's f32 ``acc += w * partial`` makes a
+    zero-weight slot an exact no-op, so one bucketed-k graph serves
+    heterogeneous per-request plans numerics-preserving (DESIGN.md §10).
     """
-    weights, idx, aux = route(params, cfg, x2d, top_k)
+    weights, idx, aux = route(params, cfg, x2d, top_k, k_budget=k_budget)
     if expert_dtype == "bf16":
         y = routed_ffn(params["w1"], params["w2"], x2d, idx, weights,
                        use_kernel, pred_idx=pred_idx)

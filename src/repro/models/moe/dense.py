@@ -18,11 +18,12 @@ from repro.models.moe.router import capacity, route
 
 
 def moe_dense(params: Dict, cfg: ModelConfig, x2d, top_k: int,
-              use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+              use_kernel: bool = False, *, k_budget=None,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x2d [T, D] -> (y2d [T, D], aux_loss)."""
     t, d = x2d.shape
     e = cfg.num_experts
-    weights, idx, aux = route(params, cfg, x2d, top_k)
+    weights, idx, aux = route(params, cfg, x2d, top_k, k_budget=k_budget)
     cap = capacity(t, top_k, e, cfg.moe_capacity_factor)
     pos, keep = _slot_positions(idx, e, cap)
 

@@ -24,16 +24,18 @@ from repro.models.moe.router import route
 
 def moe_gmm(params: Dict, cfg: ModelConfig, x2d, top_k: int,
             use_kernel: bool = False, block_m: Optional[int] = None,
-            *, expert_dtype: str = "bf16",
+            *, expert_dtype: str = "bf16", k_budget=None,
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x2d [T, D] -> (y2d [T, D], aux_loss).  Dropless for any T, k.
 
     ``expert_dtype`` != "bf16" runs the grouped FFN over int8-stored
     expert tiles (``grouped_ffn_quant``); routing and the sort plan are
-    identical either way.
+    identical either way.  ``k_budget`` [T] zero-weights routed copies past
+    each token's budget -- they still ride the sort plan (dropless layout is
+    budget-oblivious) but absorb exactly in ``sort_combine``.
     """
     t, _ = x2d.shape
-    weights, idx, aux = route(params, cfg, x2d, top_k)
+    weights, idx, aux = route(params, cfg, x2d, top_k, k_budget=k_budget)
     # kernel path keeps the Mosaic sublane floor (8); the jnp path may
     # tile below it so decode shapes stop padding every group to 8 rows
     bm = block_m or default_block_m(t * top_k, floor=8 if use_kernel else 1)

@@ -80,44 +80,54 @@ def _require_bf16(impl: str, expert_dtype: str):
             f"expert_dtype={expert_dtype!r} requires 'gmm' or 'decode'")
 
 
+def _no_budget(impl: str, k_budget):
+    if k_budget is not None:
+        raise ValueError(
+            f"moe impl {impl!r} does not serve per-token k budgets; "
+            f"mixed-plan serving requires 'dense', 'gmm' or 'decode'")
+
+
 @register_impl("dense")
 def _dense(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-           a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
+           a2a_chunks=1, expert_dtype="bf16", pred_idx=None, k_budget=None):
     del mesh, a2a_chunks, pred_idx
     _require_bf16("dense", expert_dtype)
-    return moe_dense(params, cfg, x2d, top_k, use_kernel)
+    return moe_dense(params, cfg, x2d, top_k, use_kernel, k_budget=k_budget)
 
 
 @register_impl("gmm")
 def _gmm(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-         a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
+         a2a_chunks=1, expert_dtype="bf16", pred_idx=None, k_budget=None):
     del mesh, a2a_chunks, pred_idx  # jnp/Pallas body; GSPMD partitions it
     return moe_gmm(params, cfg, x2d, top_k, use_kernel,
-                   expert_dtype=expert_dtype)
+                   expert_dtype=expert_dtype, k_budget=k_budget)
 
 
 @register_impl("decode")
 def _decode(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-            a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
+            a2a_chunks=1, expert_dtype="bf16", pred_idx=None, k_budget=None):
     del mesh, a2a_chunks  # single-device body; GSPMD partitions under jit
     return moe_decode(params, cfg, x2d, top_k, use_kernel,
-                      expert_dtype=expert_dtype, pred_idx=pred_idx)
+                      expert_dtype=expert_dtype, pred_idx=pred_idx,
+                      k_budget=k_budget)
 
 
 @register_impl("ep_a2a", needs_mesh=True)
 def _ep_a2a(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-            a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
+            a2a_chunks=1, expert_dtype="bf16", pred_idx=None, k_budget=None):
     del pred_idx
     _require_bf16("ep_a2a", expert_dtype)
+    _no_budget("ep_a2a", k_budget)
     return moe_ep_a2a(params, cfg, x2d, top_k, mesh=mesh,
                       use_kernel=use_kernel, a2a_chunks=a2a_chunks)
 
 
 @register_impl("ep_psum", needs_mesh=True)
 def _ep_psum(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
-             a2a_chunks=1, expert_dtype="bf16", pred_idx=None):
+             a2a_chunks=1, expert_dtype="bf16", pred_idx=None, k_budget=None):
     del a2a_chunks, pred_idx
     _require_bf16("ep_psum", expert_dtype)
+    _no_budget("ep_psum", k_budget)
     return moe_ep_psum(params, cfg, x2d, top_k, mesh=mesh,
                        use_kernel=use_kernel)
 
@@ -125,7 +135,7 @@ def _ep_psum(params, cfg, x2d, top_k, *, mesh=None, use_kernel=False,
 def moe(params: Dict, cfg: ModelConfig, x, top_k: int, *,
         impl: Optional[str] = None, mesh=None, use_kernel: bool = False,
         a2a_chunks: int = 1, decode_kernel: bool = False,
-        expert_dtype: str = "bf16", pred_idx=None):
+        expert_dtype: str = "bf16", pred_idx=None, k_budget=None):
     """x [B, S, D] -> (y [B, S, D], aux_loss scalar).
 
     ``impl`` overrides ``cfg.moe_impl``; mesh-requiring impls fall back to
@@ -136,6 +146,9 @@ def moe(params: Dict, cfg: ModelConfig, x, top_k: int, *,
     (``quantize_expert_params``) and is served by gmm/decode only.
     ``pred_idx`` [B*S, k] is the router-lookahead hint for the fused
     decode path (ignored elsewhere; never changes outputs).
+    ``k_budget`` [B*S] i32 caps active experts per token below ``top_k``
+    via exact zero-weighting in ``route`` (mixed-plan serving; DESIGN.md
+    §10); dense/gmm/decode only.
     """
     b, s, d = x.shape
     x2d = x.reshape(b * s, d)
@@ -147,5 +160,5 @@ def moe(params: Dict, cfg: ModelConfig, x, top_k: int, *,
         fn, _ = _IMPLS["dense"]
     y2d, aux = fn(params, cfg, x2d, top_k, mesh=mesh, use_kernel=use_kernel,
                   a2a_chunks=a2a_chunks, expert_dtype=expert_dtype,
-                  pred_idx=pred_idx)
+                  pred_idx=pred_idx, k_budget=k_budget)
     return y2d.reshape(b, s, d), aux

@@ -17,14 +17,27 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 
 
-def route(params: Dict, cfg: ModelConfig, x2d, top_k: int):
-    """x2d [T, D] -> (weights [T,k] f32, idx [T,k] i32, aux_loss scalar)."""
+def route(params: Dict, cfg: ModelConfig, x2d, top_k: int, k_budget=None):
+    """x2d [T, D] -> (weights [T,k] f32, idx [T,k] i32, aux_loss scalar).
+
+    ``k_budget`` (optional, [T] i32) caps the number of *active* experts per
+    token below the static ``top_k``: routed slots at positions >= the token's
+    budget get weight exactly 0.0 *before* the top-k renormalization, so a
+    token budgeted ``kb`` experts inside a graph traced for ``top_k >= kb``
+    produces bitwise the same weights as a graph traced for ``top_k == kb``
+    (the zero-weight surplus slots absorb exactly in every combine).  This is
+    the contract that lets one bucketed-k serving graph carry heterogeneous
+    per-request LExI plans (DESIGN.md §10).
+    """
     logits = x2d.astype(jnp.float32) @ params["router"]          # [T, E]
     if cfg.router_type == "sigmoid":
         scores = jax.nn.sigmoid(logits)
     else:
         scores = jax.nn.softmax(logits, axis=-1)
     weights, idx = jax.lax.top_k(scores, top_k)                  # [T, k]
+    if k_budget is not None:
+        slot = jnp.arange(top_k, dtype=jnp.int32)[None, :]       # [1, k]
+        weights = jnp.where(slot < k_budget[:, None], weights, 0.0)
     if cfg.norm_topk_prob:
         weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-20)
     if cfg.dynamic_skip_tau > 0.0 and top_k >= 2:

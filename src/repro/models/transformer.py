@@ -82,10 +82,13 @@ def forward(
     opts: ModelOpts = DEFAULT_OPTS,
     block_tables=None,
     kernel_blocks=None,
+    k_budgets=None,
 ):
     """tokens [B,S]; positions [B,S] (train/prefill/chunk) or [B] (decode).
 
-    Returns (hidden [B,S,D], new_caches, aux_loss).
+    Returns (hidden [B,S,D], new_caches, aux_loss).  ``k_budgets``
+    [B, n_moe] i32 caps per-row active experts below the pattern's static
+    per-layer top-k (per-request LExI plans; DESIGN.md §10).
     """
     x = embed_tokens(params, cfg, tokens)
     if prefix_embeds is not None:
@@ -94,7 +97,7 @@ def forward(
     x, new_caches, aux = blocks_mod.apply_stack(
         params["stack"], cfg, x, positions, mode=mode, caches=caches,
         mesh=mesh, opts=opts, block_tables=block_tables,
-        kernel_blocks=kernel_blocks)
+        kernel_blocks=kernel_blocks, k_budgets=k_budgets)
     return x, new_caches, aux
 
 
@@ -188,6 +191,7 @@ def chunk_prefill(
     block_tables=None,
     mesh=None,
     opts: ModelOpts = DEFAULT_OPTS,
+    k_budgets=None,
 ):
     """One chunked-prefill step over all slots.  Returns (logits [B,V], caches).
 
@@ -199,7 +203,8 @@ def chunk_prefill(
     """
     hidden, caches, _ = forward(params, cfg, tokens, positions, mode="chunk",
                                 caches=caches, mesh=mesh, opts=opts,
-                                block_tables=block_tables)
+                                block_tables=block_tables,
+                                k_budgets=k_budgets)
     if last_index is None:
         sel = hidden[:, -1]
     else:
@@ -220,6 +225,7 @@ def decode_step(
     opts: ModelOpts = DEFAULT_OPTS,
     block_tables=None,
     kernel_blocks=None,
+    k_budgets=None,
 ):
     """One decode step.  Returns (logits [B,V] f32, updated caches).
 
@@ -228,6 +234,7 @@ def decode_step(
     hidden, caches, _ = forward(params, cfg, tokens[:, None], pos, mode="decode",
                                 caches=caches, mesh=mesh, opts=opts,
                                 block_tables=block_tables,
-                                kernel_blocks=kernel_blocks)
+                                kernel_blocks=kernel_blocks,
+                                k_budgets=k_budgets)
     logits = lm_logits(params, cfg, hidden)[:, 0]
     return logits, caches

@@ -38,6 +38,18 @@ closed-loop wrapper: submit everything at t=now, drain, report.
 ``Engine(cfg, params).serve(reqs)`` is unchanged from the monolith it
 replaced; ``serve(reqs, plan="name")`` after ``add_plan`` serves a LExI
 plan from the same runner and weights.
+
+The expert budget is a **per-request resource** (DESIGN.md §10): each
+``Request`` may carry its own registered plan name, resolved at submit
+against the serve default, and heterogeneous-plan requests pack into one
+batch.  A step whose live slots share a plan runs that plan's exact
+static-k graph; a mixed step runs a bucketed-k graph (per-layer max k,
+pow2 roundup) with surplus routed slots zero-weighted -- bitwise the
+numerics of each slot's own plan.  Under pool/queue pressure the engine
+can walk non-priority requests down a declared plan ladder
+(``set_plan_ladder`` + ``degrade_under_pressure=True``), one rung per
+(re-)admission -- a plan switch always rides the prefill boundary, since
+the per-request prefix-cache salt makes the old rung's pages a miss.
 """
 
 from __future__ import annotations
@@ -55,6 +67,7 @@ from repro.configs.base import ModelConfig
 from repro.models.attention import cache_buf_len
 from repro.models.opts import DEFAULT_OPTS, ModelOpts
 from repro.serving.clock import Clock, WallClock
+from repro.serving.detok import IncrementalDetok
 from repro.serving.kv_cache import KVCache
 from repro.serving.request import Request, Result
 from repro.serving.runner import BASE_PLAN, ModelRunner
@@ -83,6 +96,8 @@ class Engine:
                  preemption: Optional[bool] = None,
                  prefix_cache: bool = False,
                  scheduler: str = "fifo", truncate_prompts: bool = False,
+                 degrade_under_pressure: bool = False,
+                 degrade_watermark: float = 0.25,
                  eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
                  clock: Optional[Clock] = None, mesh=None, seed: int = 0):
         self.max_batch = max_batch
@@ -196,10 +211,23 @@ class Engine:
 
         self.runner = ModelRunner(cfg, params, mesh=mesh, opts=opts)
         self.plan_name = BASE_PLAN
+        # pressure-adaptive plan degradation (DESIGN.md §10): an ordered
+        # expensive -> cheap ladder of plan names (set after add_plan via
+        # set_plan_ladder); under pool/queue pressure an admission moves a
+        # non-priority request one rung down -- always at the prefill
+        # boundary (the salt change makes the old cached prefix a miss,
+        # so a resume recomputes under the new plan; a live slot's cache
+        # is never mutated by a plan switch)
+        self.plan_ladder: tuple = ()
+        self.degrade_under_pressure = bool(degrade_under_pressure)
+        self.degrade_watermark = float(degrade_watermark)
         self._kv_kw = dict(layout=cache_layout, page_size=page_size,
                            num_pages=num_pages,
                            prefix_cache=self.prefix_cache)
-        self.kv = KVCache(cfg, max_batch, max_len, **self._kv_kw)
+        # the KV pool is built from the runner's *split* serving config:
+        # one cache entry per layer, identical across every plan/bucket
+        # (what lets heterogeneous-plan slots share one pool)
+        self.kv = KVCache(self.cfg, max_batch, max_len, **self._kv_kw)
         self.sched = Scheduler(max_batch, policy=scheduler,
                                clock=self.clock)
 
@@ -227,7 +255,8 @@ class Engine:
         # only positions actually computed, so throughput() stays honest
         return {"prefill_tokens": 0, "decode_tokens": 0,
                 "recompute_tokens": 0, "steps": 0, "preemptions": 0,
-                "live_peak": 0, "prefix_hit_tokens": 0, "cow_copies": 0}
+                "live_peak": 0, "prefix_hit_tokens": 0, "cow_copies": 0,
+                "plan_degradations": 0, "mixed_plan_steps": 0}
 
     # ------------------------------------------------------------------ #
     # Plans
@@ -239,6 +268,49 @@ class Engine:
     def add_plan(self, name: str, plan) -> ModelConfig:
         """Register a LExI plan; weights stay shared with the base config."""
         return self.runner.add_plan(name, plan)
+
+    def set_plan_ladder(self, names: Sequence[str]) -> None:
+        """Declare the degradation ladder, most expensive rung first.
+        Every name must already be registered (``add_plan`` / "base")."""
+        for n in names:
+            if n not in self.runner.plans:
+                raise ValueError(f"unknown plan {n!r} in ladder; "
+                                 f"have {sorted(self.runner.plans)}")
+        self.plan_ladder = tuple(names)
+
+    def _under_pressure(self) -> bool:
+        """KV-pool pressure (free pages below the watermark share) or
+        compute pressure (more requests queued than slots free)."""
+        if len(self.sched.waiting) > len(self.sched.free_slots()):
+            return True
+        if self.kv.layout == "paged":
+            total = self.kv.num_pages - 1       # minus the trash page
+            return total > 0 and (self.kv.free_pages()
+                                  < self.degrade_watermark * total)
+        return False
+
+    def _degraded_rung(self, t: Tracked) -> str:
+        """Plan to *try* admitting ``t`` under: its current rung, or one
+        rung cheaper when the policy is on, the request is degradable
+        (priority 0, on the ladder, not already at the bottom) and the
+        system is under pressure.  At most one rung per admission attempt;
+        the result is committed only if the allocation succeeds."""
+        cur = t.served_plan
+        if (not self.degrade_under_pressure or not self.plan_ladder
+                or t.req.priority > 0 or cur not in self.plan_ladder):
+            return cur
+        i = self.plan_ladder.index(cur)
+        if i + 1 >= len(self.plan_ladder) or not self._under_pressure():
+            return cur
+        return self.plan_ladder[i + 1]
+
+    def _commit_plan(self, t: Tracked, served: str) -> None:
+        """Record a successful admission's (possibly degraded) rung."""
+        if served != t.served_plan:
+            t.served_plan = served
+            t.result.served_plan = served
+            t.result.plan_degradations += 1
+            self.stats["plan_degradations"] += 1
 
     def set_plan(self, name: str) -> None:
         """Switch the serving specialization (between workloads only).
@@ -293,6 +365,15 @@ class Engine:
     def _submit(self, req: Request,
                 t_arrival: Optional[float] = None) -> Tracked:
         t = self.sched.submit(req, t_submit=t_arrival)
+        # resolve the plan once, at submission: a per-request plan wins,
+        # otherwise the serve/engine default -- so serve(reqs, plan=) and
+        # set_plan are exactly "stamp this plan on every request"
+        t.plan = t.served_plan = (req.plan if req.plan is not None
+                                  else self.plan_name)
+        t.result.plan = t.result.served_plan = t.plan
+        if req.detok:
+            t.detok = (IncrementalDetok(req.detok) if callable(req.detok)
+                       else IncrementalDetok())
         limit = self.max_len - 1
         if t.prompt_len == 0:
             self.sched.reject(t, "rejected_empty_prompt")
@@ -303,6 +384,8 @@ class Engine:
                 t.result.prompt_len = limit
             else:
                 self.sched.reject(t, "rejected_prompt_too_long")
+        if t.state != DONE and t.plan not in self.runner.plans:
+            self.sched.reject(t, "rejected_unknown_plan")
         if (t.state != DONE
                 and not self.kv.fits_ever(t.prompt_len
                                           + t.req.max_new_tokens)):
@@ -312,16 +395,19 @@ class Engine:
     # ------------------------------------------------------------------ #
     # Step phases
     # ------------------------------------------------------------------ #
-    @property
-    def _salt(self):
+    def _salt_for(self, served_plan: str):
         """Prefix-cache chain root key: everything (beyond the tokens)
-        that changes what K/V a prefill writes.  The LExI plan changes
-        per-layer expert budgets -- hidden states and therefore K/V --
-        and the expert storage dtype changes numerics."""
-        return (self.plan_name, self.expert_dtype)
+        that changes what K/V a prefill writes.  The request's *served*
+        LExI plan changes per-layer expert budgets -- hidden states and
+        therefore K/V -- and the expert storage dtype changes numerics.
+        Per-request salting is also what makes degradation safe: a
+        degraded resume misses the old rung's cached prefix and
+        recomputes everything under the new plan."""
+        return (served_plan, self.expert_dtype)
 
     def _admit(self) -> None:
         def can_allocate(slot: int, t: Tracked) -> bool:
+            served = self._degraded_rung(t)
             if self.ondemand:
                 # reserve only what this admission's prefill will write:
                 # the prompt, plus generated-so-far minus the pending
@@ -347,7 +433,7 @@ class Engine:
                     # DECODE with zero recompute
                     cap = n if gen else n - 1
                     shared, hit, chain = self.kv.match_prefix(
-                        self._salt, fill, cap)
+                        self._salt_for(served), fill, cap)
                 # gate against *private* need: pages the hit serves from
                 # already-live (rc>=1) pages cost no pool capacity, while
                 # an rc-0 LRU page costs one (pinning removes it from the
@@ -367,9 +453,13 @@ class Engine:
                     t.hit_len = hit
                     t.chain = chain
                     t.hashed_pages = hit // self.kv.page_size
+                self._commit_plan(t, served)
                 return True
-            return self.kv.allocate(slot,
-                                    t.prompt_len + t.req.max_new_tokens)
+            if not self.kv.allocate(slot,
+                                    t.prompt_len + t.req.max_new_tokens):
+                return False
+            self._commit_plan(t, served)
+            return True
 
         for t in self.sched.admit(can_allocate):
             self.slot_temp[t.slot] = t.req.temperature
@@ -441,6 +531,32 @@ class Engine:
         self.kv.release(slot)
         self.slot_pos[slot] = -1
         self.slot_topk[slot] = 0    # lingering caps would keep _topks() hot
+        k = f"plan_requests:{t.served_plan}"
+        self.stats[k] = self.stats.get(k, 0) + 1
+
+    def _plan_batch(self, live: List[Tracked]):
+        """-> (plan, bucket, k_budgets) for one batched model step.
+
+        All live slots on one plan: that plan's own static-k graph, no
+        budgets (zero overhead vs the single-plan engine, bitwise the
+        same numerics).  Mixed plans: the bucketed-k graph for the
+        batch's per-layer max k (pow2 roundup), with each slot's true
+        per-layer budget -- surplus routed slots are zero-weighted in
+        route(), so every row is bitwise what its own plan's graph
+        computes (DESIGN.md §10)."""
+        names = {t.served_plan for t in live}
+        if len(names) == 1:
+            return names.pop(), None, None
+        ks = self.runner.plan_ks
+        n_moe = len(ks[BASE_PLAN])
+        maxk = tuple(max(ks[t.served_plan][l] for t in live)
+                     for l in range(n_moe))
+        bucket = self.runner.bucket_for(maxk)
+        budgets = np.tile(np.asarray(bucket, np.int32), (self.max_batch, 1))
+        for t in live:
+            budgets[t.slot] = ks[t.served_plan]
+        self.stats["mixed_plan_steps"] += 1
+        return BASE_PLAN, bucket, budgets
 
     def _whole_prefill(self, t: Tracked) -> None:
         """Legacy [1, padded_len] prefill + slot scatter (mamba fallback)."""
@@ -454,7 +570,7 @@ class Engine:
         one_cache = models.init_caches(self.cfg, 1, self.max_len)
         logits, one_cache = self.runner.whole_prefill(
             jnp.asarray(tokens), jnp.asarray(positions), one_cache,
-            plan=self.plan_name)
+            plan=t.served_plan)
         self.kv.scatter_slot(one_cache, t.slot)
         self.stats["prefill_tokens"] += plen
         t.consumed = plen
@@ -536,10 +652,11 @@ class Engine:
                 else:
                     last_idx[t.slot] = n - 1
                     sampling.append(t)
+        plan, bucket, budgets = self._plan_batch(prefilling)
         logits, self.kv.caches = self.runner.chunk_prefill(
             jnp.asarray(tokens), jnp.asarray(positions),
             jnp.asarray(last_idx), self.kv.caches, self.kv.block_tables(),
-            plan=self.plan_name)
+            plan=plan, bucket=bucket, k_budgets=budgets)
         for t in prefilling:    # chunk writes are committed: index them
             self._register_pages(t, t.consumed)
         if sampling:
@@ -603,11 +720,13 @@ class Engine:
         kernel_blocks = (self.kv.live_blocks(pos)
                          if self.use_kernel and self.kv.layout == "paged"
                          else None)
+        plan, bucket, budgets = self._plan_batch(decoding)
         logits, self.kv.caches = self.runner.decode(
             jnp.asarray(tokens), jnp.asarray(pos), self.kv.caches,
-            self.kv.block_tables(), plan=self.plan_name,
+            self.kv.block_tables(), plan=plan,
             use_kernel=self.use_kernel, kernel_blocks=kernel_blocks,
-            moe_decode=self.use_moe_decode)
+            moe_decode=self.use_moe_decode,
+            bucket=bucket, k_budgets=budgets)
         self.key, sub = jax.random.split(self.key)
         nxt = np.asarray(sample_per_slot(logits, sub,
                                          jnp.asarray(self.slot_temp),
@@ -620,6 +739,8 @@ class Engine:
             self.slot_last[t.slot] = tok
             self.slot_budget[t.slot] -= 1
             self.stats["decode_tokens"] += 1
+            k = f"plan_decode_tokens:{t.served_plan}"
+            self.stats[k] = self.stats.get(k, 0) + 1
             # register before any finish: a finishing request's pages park
             # in the LRU (content intact) instead of the free list, so its
             # prefix stays reusable after release
@@ -714,6 +835,7 @@ class Engine:
 
     def serve(self, requests: Sequence[Request], *,
               plan: Optional[str] = None,
+              detok=False,
               max_steps: Optional[int] = None,
               arrival_times: Optional[Sequence[float]] = None) -> List[Result]:
         """Run a full workload with continuous batching; returns all results.
@@ -726,12 +848,22 @@ class Engine:
         steps until all have completed.
 
         Throughput counters and latency percentiles are per-serve (reset at
-        entry).  ``plan=`` selects a registered LExI specialization;
-        omitting it serves the base config (a previous serve's plan does
-        not stick).  ``max_steps`` bounds the engine-step loop (a livelock
-        guard for stress harnesses): exceeding it raises RuntimeError.
+        entry).  ``plan=`` sets this serve's *default* plan -- exactly
+        equivalent to stamping it on every request whose ``Request.plan``
+        is None; requests carrying their own plan mix freely in the batch
+        (DESIGN.md §10).  Omitting it serves the base config (a previous
+        serve's plan does not stick).  ``detok=`` turns on incremental
+        detokenized streaming for every request that did not opt in
+        itself (True = default synthetic detokenizer, or an ``ids ->
+        text`` callable).  ``max_steps`` bounds the engine-step loop (a
+        livelock guard for stress harnesses): exceeding it raises
+        RuntimeError.
         """
         self.set_plan(plan if plan is not None else BASE_PLAN)
+        if detok:
+            for r in requests:
+                if not r.detok:
+                    r.detok = detok
         # refuse duplicate uids before anything is submitted: a mid-batch
         # refusal would leave the earlier requests queued (and their uids
         # claimed) with no way to drain them -- the scheduler-level guard
@@ -760,6 +892,17 @@ class Engine:
         self.stats["prefix_hit_rate"] = hit / denom if denom else 0.0
         self.stats.update(self.sched.percentiles())
         return self.sched.results()
+
+    def plan_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-plan view of the last serve's counters: plan name ->
+        {"plan_requests": n, "plan_decode_tokens": n} (stats themselves
+        stay flat scalar keys ``plan_requests:<name>`` etc)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for k, v in self.stats.items():
+            if k.startswith(("plan_requests:", "plan_decode_tokens:")):
+                stat, name = k.split(":", 1)
+                out.setdefault(name, {})[stat] = v
+        return out
 
     def throughput(self) -> float:
         """Useful tokens (prompt + generated) per second over the last

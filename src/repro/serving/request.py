@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Union
 
 import numpy as np
 
@@ -21,8 +21,20 @@ class Request:
     #: checked per slot, so requests with different stop tokens -- or
     #: none -- share a batch
     eos_id: Optional[int] = None
-    #: streaming callback, called as ``stream(uid, token)`` per new token
+    #: streaming callback, called as ``stream(uid, token)`` per new token,
+    #: or as ``stream(uid, text_delta)`` when ``detok`` is set
     stream: Optional[Callable[[int, int], None]] = None
+    #: LExI plan (by engine-registered name) to serve this request under;
+    #: None = whatever the serve/engine default plan is.  Requests with
+    #: different plans share a batch (DESIGN.md §10).
+    plan: Optional[str] = None
+    #: requests with priority > 0 are exempt from pressure-adaptive plan
+    #: degradation (they always keep their requested plan)
+    priority: int = 0
+    #: opt-in incremental detokenization: ``True`` uses the default
+    #: synthetic detokenizer, or pass ``ids -> text`` directly.  Streams
+    #: text deltas instead of token ids and fills ``Result.text``.
+    detok: Union[bool, Callable[[List[int]], str]] = False
 
 
 @dataclass
@@ -39,3 +51,13 @@ class Result:
     recompute_tokens: int = 0           # positions re-prefilled on resume
     prefix_hit_tokens: int = 0          # positions served from cached pages
     cow_copies: int = 0                 # boundary pages copied before write
+    #: plan the request asked for (resolved against the serve default)
+    plan: str = ""
+    #: plan it was actually served under (== ``plan`` unless the engine's
+    #: pressure-adaptive policy degraded it down the ladder)
+    served_plan: str = ""
+    #: times this request was moved one rung down the plan ladder
+    plan_degradations: int = 0
+    #: detokenized output text (filled only when ``Request.detok`` is set;
+    #: always equals the concatenation of the streamed deltas)
+    text: str = ""

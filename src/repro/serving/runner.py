@@ -30,26 +30,61 @@ working) is the expert-tile storage dtype from ``opts``: quantized and
 bf16 engines must never share a compiled graph, because the quantized
 graphs bake in the int8/scale-row parameter layout.
 
-Multiple LExI plans share the runner: ``add_plan`` validates a plan
-against the base config and derives the plan's config + regrouped
-parameter view once (``apply_plan_params`` re-slices the stacked layer
-groups; the weights themselves are loaded exactly once).  Serving a
-different plan is then just stepping through that plan's compiled
-specializations -- no engine rebuild, no weight re-init.
+Per-request plans (DESIGN.md §10)
+---------------------------------
+Every serving graph runs a **per-layer split** of the config's pattern:
+each layer gets a unique ``BlockSpec.split_id``, so the KV-cache pytree
+has exactly one entry per layer and is *independent* of the per-layer
+top-k.  That is what lets one engine-held cache serve any mix of plans --
+a plan only changes each layer's static ``moe_top_k``, never the cache
+structure.  All plans share one split-regrouped parameter view (expert
+weights do not depend on k; loaded exactly once).
+
+A batch whose live slots all share one plan steps through that plan's
+``(plan, ...)`` graphs exactly as before.  A *mixed* batch steps through a
+**bucketed-k** graph instead, keyed by
+``(("bucket", k_0, ..., k_{n-1}), kind, ...)`` where ``k_l`` is the
+power-of-two roundup of the batch's per-layer max plan k (clamped to
+``num_experts``).  Slots budgeted fewer experts than the bucket pass a
+dynamic ``k_budgets [B, n_moe]`` argument whose surplus routed slots get
+weight exactly 0.0 in ``route`` -- bitwise the same outputs as the slot's
+own static-k graph, so bucket graphs are numerics-preserving and the
+graph count stays O(log(E)^n_distinct) instead of one per plan combination.
 """
 
 from __future__ import annotations
 
-from dataclasses import replace
+from dataclasses import replace as dc_replace
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro import models
 from repro.configs.base import ModelConfig
+from repro.models import blocks as blocks_mod
 from repro.models.opts import DEFAULT_OPTS, ModelOpts
 
 BASE_PLAN = "base"
+
+
+def split_pattern(cfg: ModelConfig) -> Tuple:
+    """Per-layer split of ``cfg``'s resolved pattern (unique split_id each)."""
+    return tuple(dc_replace(s, split_id=i)
+                 for i, s in enumerate(cfg.pattern()))
+
+
+def _split_cfg(cfg: ModelConfig) -> ModelConfig:
+    """``cfg`` with its (plan-resolved) pattern pinned to per-layer groups."""
+    return cfg.with_(block_pattern=split_pattern(cfg), lexi_plan=None)
+
+
+def bucket_k(k: int, num_experts: int) -> int:
+    """Power-of-two roundup of ``k``, clamped to the expert count."""
+    b = 1
+    while b < k:
+        b *= 2
+    return min(b, num_experts)
 
 
 class ModelRunner:
@@ -57,28 +92,74 @@ class ModelRunner:
                  opts: ModelOpts = DEFAULT_OPTS):
         self.mesh = mesh
         self.opts = opts
-        #: plan name -> (cfg, params-view); "base" is the config as given
-        self.plans: Dict[str, Tuple[ModelConfig, Any]] = {
-            BASE_PLAN: (cfg, params)}
+        self.base_cfg = cfg
+        serve_cfg = _split_cfg(cfg)
+        serve_params = params
+        if "stack" in params:
+            serve_params = dict(params)
+            serve_params["stack"] = blocks_mod.regroup_stack(
+                params["stack"], cfg.pattern(), serve_cfg.pattern())
+        #: the single split-regrouped parameter view every plan shares
+        self.params = serve_params
+        #: plan name -> split serving config; "base" is the config as given
+        self.plans: Dict[str, ModelConfig] = {BASE_PLAN: serve_cfg}
+        #: plan name -> per-MoE-layer top-k tuple (budget source for mixing)
+        self.plan_ks: Dict[str, Tuple[int, ...]] = {
+            BASE_PLAN: self._moe_ks(serve_cfg)}
+        self._bucket_cfgs: Dict[Tuple[int, ...], ModelConfig] = {}
         self._jit: Dict[Tuple, Any] = {}
+
+    @staticmethod
+    def _moe_ks(cfg: ModelConfig) -> Tuple[int, ...]:
+        return tuple(s.moe_top_k for s in cfg.pattern()
+                     if s.kind == "attn_moe")
 
     # ------------------------------------------------------------------ #
     # Plans
     # ------------------------------------------------------------------ #
     def add_plan(self, name: str, plan) -> ModelConfig:
         """Register a LExI plan under ``name``; returns its config."""
-        from repro.core.apply import apply_plan_params
         if name == BASE_PLAN:
             raise ValueError(f"{BASE_PLAN!r} names the unplanned base "
                              "specialization; register plans under another "
                              "name")
-        base_cfg, base_params = self.plans[BASE_PLAN]
-        cfg2, params2 = apply_plan_params(base_params, base_cfg, plan)
-        self.plans[name] = (cfg2, params2)
-        return cfg2
+        ks = tuple(int(k) for k in getattr(plan, "plan", plan))
+        plan_cfg = self.base_cfg.with_lexi_plan(ks)
+        plan_cfg.pattern()                     # validate lengths / ranges
+        self.plans[name] = _split_cfg(plan_cfg)
+        self.plan_ks[name] = ks
+        return plan_cfg
 
     def cfg_for(self, plan: str = BASE_PLAN) -> ModelConfig:
-        return self.plans[plan][0]
+        return self.plans[plan]
+
+    def bucket_for(self, ks: Tuple[int, ...]) -> Tuple[int, ...]:
+        """Per-layer max-k vector -> its power-of-two bucket vector."""
+        e = self.base_cfg.num_experts
+        return tuple(bucket_k(int(k), e) for k in ks)
+
+    def _cfg_for_bucket(self, bucket: Tuple[int, ...]) -> ModelConfig:
+        if bucket not in self._bucket_cfgs:
+            base = self.plans[BASE_PLAN]
+            pat, mi = [], 0
+            for s in base.pattern():
+                if s.kind == "attn_moe":
+                    pat.append(dc_replace(s, moe_top_k=int(bucket[mi])))
+                    mi += 1
+                else:
+                    pat.append(s)
+            if mi != len(bucket):
+                raise ValueError(f"bucket length {len(bucket)} != "
+                                 f"#MoE layers {mi}")
+            self._bucket_cfgs[bucket] = base.with_(block_pattern=tuple(pat))
+        return self._bucket_cfgs[bucket]
+
+    def _resolve(self, plan: str, bucket):
+        """-> (key head, serving cfg) for a homogeneous plan or a bucket."""
+        if bucket is None:
+            return plan, self.plans[plan]
+        bucket = tuple(int(b) for b in bucket)
+        return ("bucket", *bucket), self._cfg_for_bucket(bucket)
 
     def compiled_specializations(self) -> Tuple[Tuple, ...]:
         """Keys of every graph compiled so far (introspection / tests)."""
@@ -90,7 +171,8 @@ class ModelRunner:
     def decode(self, tokens, pos, caches, block_tables=None, *,
                plan: str = BASE_PLAN, use_kernel: Optional[bool] = None,
                kernel_blocks: Optional[int] = None,
-               moe_decode: Optional[bool] = None):
+               moe_decode: Optional[bool] = None,
+               bucket: Optional[Tuple[int, ...]] = None, k_budgets=None):
         """One decode step over all slots -> (logits [B,V], caches).
 
         ``use_kernel`` (None -> ``opts.use_paged_kernel``) selects the
@@ -98,46 +180,59 @@ class ModelRunner:
         static walk bound.  ``moe_decode`` (None ->
         ``opts.use_moe_decode_kernel``) selects the fused routed-expert
         MoE path for the step.  All three join the specialization key.
+
+        ``bucket`` (per-MoE-layer static k vector) + ``k_budgets``
+        ([B, n_moe] i32) select a mixed-plan bucket graph instead of
+        ``plan``'s graph; surplus routed slots are zero-weighted exactly.
         """
-        cfg, params = self.plans[plan]
+        head, cfg = self._resolve(plan, bucket)
         uk = self.opts.use_paged_kernel if use_kernel is None else bool(use_kernel)
         md = (self.opts.use_moe_decode_kernel if moe_decode is None
               else bool(moe_decode))
         if block_tables is None:            # contiguous layout: gather-free
             uk, kernel_blocks = False, None
-        key = (plan, "decode", int(tokens.shape[0]), uk, kernel_blocks, md,
+        key = (head, "decode", int(tokens.shape[0]), uk, kernel_blocks, md,
                self.opts.expert_dtype)
         if key not in self._jit:
-            opts = replace(self.opts, use_paged_kernel=uk,
-                           use_moe_decode_kernel=md)
+            opts = dc_replace(self.opts, use_paged_kernel=uk,
+                              use_moe_decode_kernel=md)
             kb = kernel_blocks
             self._jit[key] = jax.jit(
-                lambda p, t, po, c, bt: models.decode_fn(
+                lambda p, t, po, c, bt, kbud: models.decode_fn(
                     p, cfg, t, po, c, block_tables=bt, mesh=self.mesh,
-                    opts=opts, kernel_blocks=kb))
-        return self._jit[key](params, tokens, pos, caches, block_tables)
+                    opts=opts, kernel_blocks=kb, k_budgets=kbud))
+        if bucket is not None:
+            k_budgets = jnp.asarray(k_budgets, jnp.int32)
+        return self._jit[key](self.params, tokens, pos, caches, block_tables,
+                              k_budgets if bucket is not None else None)
 
     def chunk_prefill(self, tokens, positions, last_index, caches,
-                      block_tables=None, *, plan: str = BASE_PLAN):
+                      block_tables=None, *, plan: str = BASE_PLAN,
+                      bucket: Optional[Tuple[int, ...]] = None,
+                      k_budgets=None):
         """One ``[B, C]`` chunked-prefill step -> (logits [B,V], caches)."""
-        cfg, params = self.plans[plan]
-        key = (plan, "chunk", int(tokens.shape[1]), self.opts.expert_dtype)
+        head, cfg = self._resolve(plan, bucket)
+        key = (head, "chunk", int(tokens.shape[1]), self.opts.expert_dtype)
         if key not in self._jit:
             self._jit[key] = jax.jit(
-                lambda p, t, po, li, c, bt: models.chunk_prefill_fn(
+                lambda p, t, po, li, c, bt, kbud: models.chunk_prefill_fn(
                     p, cfg, t, po, c, last_index=li, block_tables=bt,
-                    mesh=self.mesh, opts=self.opts))
-        return self._jit[key](params, tokens, positions, last_index, caches,
-                              block_tables)
+                    mesh=self.mesh, opts=self.opts, k_budgets=kbud))
+        if bucket is not None:
+            k_budgets = jnp.asarray(k_budgets, jnp.int32)
+        return self._jit[key](self.params, tokens, positions, last_index,
+                              caches, block_tables,
+                              k_budgets if bucket is not None else None)
 
     def whole_prefill(self, tokens, positions, caches, *,
                       plan: str = BASE_PLAN):
         """Legacy per-request ``[1, L]`` prefill -> (logits [1,V], caches).
 
         ``caches`` is a fresh 1-slot cache; the caller scatters it into its
-        slot (mamba fallback -- see kv_cache.scatter_slot).
+        slot (mamba fallback -- see kv_cache.scatter_slot).  Single-request
+        width means the plan is always homogeneous here.
         """
-        cfg, params = self.plans[plan]
+        cfg = self.plans[plan]
         key = (plan, "prefill", int(tokens.shape[1]),
                self.opts.expert_dtype)
         if key not in self._jit:
@@ -145,4 +240,4 @@ class ModelRunner:
                 lambda p, t, po, c: models.prefill_fn(
                     p, cfg, {"tokens": t, "positions": po}, c,
                     mesh=self.mesh, opts=self.opts))
-        return self._jit[key](params, tokens, positions, caches)
+        return self._jit[key](self.params, tokens, positions, caches)

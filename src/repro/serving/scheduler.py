@@ -81,6 +81,15 @@ class Tracked:
     chain: int = 0
     hashed_pages: int = 0
     hit_len: int = 0
+    #: LExI plan names (engine-resolved at submit): what the request asked
+    #: for, and the rung it is currently served under -- ``served_plan``
+    #: only moves *down* the engine's ladder, one rung per (re-)admission
+    #: under pressure, and a change rides the prefill boundary (the salt
+    #: change forces recompute; a live slot's cache is never mutated)
+    plan: str = ""
+    served_plan: str = ""
+    #: incremental detokenizer state (None unless ``req.detok`` is set)
+    detok: Optional[object] = None
     #: arrival time (open-loop: when the request *entered*, which may be
     #: long before admission); the -1 sentinels mean "never happened" --
     #: 0.0 is a legitimate virtual-clock timestamp
@@ -227,7 +236,14 @@ class Scheduler:
         if not t.result.tokens:
             t.t_first = self.clock.now()
         t.result.tokens.append(token)
-        if t.req.stream is not None:
+        if t.detok is not None:
+            # incremental detok: stream the text *delta* instead of the
+            # raw token id; Result.text is the running concatenation
+            delta = t.detok.push(token)
+            t.result.text = t.detok.text
+            if t.req.stream is not None:
+                t.req.stream(t.req.uid, delta)
+        elif t.req.stream is not None:
             t.req.stream(t.req.uid, token)
 
     def _record_latency(self, t: Tracked) -> None:

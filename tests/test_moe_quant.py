@@ -408,7 +408,7 @@ class TestEngineQuant:
         from repro.serving import Engine
         eng = Engine(cfg, params, max_batch=2, max_len=64,
                      expert_dtype="int8")
-        _, qp = eng.runner.plans["base"]
+        qp = eng.runner.params
         moe_leaf = qp["stack"]["groups"][0]["moe"]
         assert moe_leaf["w1"].dtype == jnp.int8
         assert "w1_scale" in moe_leaf

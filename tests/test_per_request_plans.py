@@ -1,0 +1,320 @@
+"""Per-request LExI plans: expert budget as a scheduling resource.
+
+Pins the DESIGN.md §10 contract end to end:
+
+* mixed-plan batches (>= 3 distinct plans, fused MoE decode kernel on)
+  are token-exact against solo per-plan engines -- the bucketed-k graph
+  with zero-weighted surplus slots is numerics-preserving;
+* homogeneous serves never compile bucket graphs, and distinct plan
+  combinations sharing a bucket share one graph;
+* pressure-adaptive degradation walks non-priority requests down the
+  declared ladder one rung per admission, at the prefill boundary, with
+  per-request prefix-cache salting keeping degraded resumes correct;
+* serve(plan=) / set_plan stay exactly "stamp the plan on every request"
+  (back-compat with the engine-global plan API);
+* incremental detok streams deltas whose concatenation equals the full
+  detokenization of the final tokens;
+* per-plan observability: plan_requests:/plan_decode_tokens: stats and
+  the Result plan fields.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import LexiPlan, apply_plan_params, uniform_plan
+from repro.serving import Engine, Request
+from repro.serving.detok import IncrementalDetok, default_decode
+
+
+def moe_cfg():
+    return get_config("olmoe-1b-7b").reduced().with_(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        num_experts=4, moe_top_k=2, moe_d_ff=64, vocab_size=128,
+        vocab_pad_multiple=16, dtype="float32", moe_impl="gmm")
+
+
+def _lexi(cfg, ks):
+    return LexiPlan(arch=cfg.name, budget=sum(ks), plan=tuple(ks),
+                    fitness=0.0, method="uniform", k_base=cfg.moe_top_k)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = moe_cfg()
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(vocab, lens, max_new=6, seed=3, plans=None, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, vocab, n).astype(np.int32),
+                    max_new_tokens=max_new,
+                    plan=(plans[i] if plans else None), **kw)
+            for i, n in enumerate(lens)]
+
+
+EKW = dict(max_batch=4, max_len=64, prefill_chunk=4, use_kernel=True,
+           use_moe_decode=True)
+
+
+def _plans_engine(cfg, params, **extra):
+    """Engine with three registered plans beyond base (k=(2,2))."""
+    eng = Engine(cfg, params, **{**EKW, **extra})
+    eng.add_plan("k1", uniform_plan(cfg, 1))        # (1, 1)
+    eng.add_plan("k12", _lexi(cfg, (1, 2)))
+    eng.add_plan("k21", _lexi(cfg, (2, 1)))
+    return eng
+
+
+class TestMixedPlanExactness:
+    def test_mixed_batch_token_exact_vs_solo_engines(self, setup):
+        """One batch, four distinct plans, fused decode kernel on: every
+        request's tokens are byte-identical to a dedicated engine whose
+        config/params have that plan baked in (the acceptance bar)."""
+        cfg, params = setup
+        plans = ["base", "k1", "k12", "k21"]
+        lens = (5, 9, 13, 7)
+        eng = _plans_engine(cfg, params)
+        out = eng.serve(_requests(cfg.vocab_size, lens, plans=plans))
+        assert eng.stats["mixed_plan_steps"] > 0
+        assert any(isinstance(k[0], tuple) and k[0][0] == "bucket"
+                   for k in eng.runner.compiled_specializations())
+
+        plan_objs = {"base": None, "k1": uniform_plan(cfg, 1),
+                     "k12": _lexi(cfg, (1, 2)), "k21": _lexi(cfg, (2, 1))}
+        for i, name in enumerate(plans):
+            if plan_objs[name] is None:
+                cfg_p, params_p = cfg, params
+            else:
+                cfg_p, params_p = apply_plan_params(params, cfg,
+                                                    plan_objs[name])
+            solo = Engine(cfg_p, params_p, **EKW)
+            ref = solo.serve([_requests(cfg.vocab_size, lens)[i]])
+            assert out[i].tokens == ref[0].tokens, name
+            assert out[i].plan == out[i].served_plan == name
+            assert out[i].plan_degradations == 0
+
+    def test_mixed_vs_homogeneous_same_engine(self, setup):
+        """A request's tokens do not depend on its batchmates' plans:
+        the same uid served solo-on-its-plan and mixed must agree."""
+        cfg, params = setup
+        eng = _plans_engine(cfg, params)
+        lens = (6, 10, 8)
+        mixed = eng.serve(_requests(cfg.vocab_size, lens,
+                                    plans=["k1", "k12", "base"]))
+        for i, name in enumerate(["k1", "k12", "base"]):
+            solo = eng.serve([_requests(cfg.vocab_size, lens)[i]], plan=name)
+            assert mixed[i].tokens == solo[0].tokens, name
+
+    def test_homogeneous_serves_compile_no_bucket_graphs(self, setup):
+        cfg, params = setup
+        eng = _plans_engine(cfg, params)
+        for name in ("k1", "k12", "base"):
+            eng.serve(_requests(cfg.vocab_size, (5, 9), plans=[name, name]))
+        assert eng.stats["mixed_plan_steps"] == 0
+        assert not any(isinstance(k[0], tuple)
+                       for k in eng.runner.compiled_specializations())
+
+    def test_plan_combinations_share_bucket_graphs(self, setup):
+        """{k1, base} and {k12, base} both bucket to per-layer (2, 2):
+        the second mixed serve must add zero *bucket* graphs (a request
+        finishing first legitimately leaves a homogeneous remainder that
+        compiles its own plan's exact graph)."""
+        cfg, params = setup
+        eng = _plans_engine(cfg, params)
+        lens = (5, 9)
+        buckets = lambda: {k for k in eng.runner.compiled_specializations()
+                           if isinstance(k[0], tuple)}
+        eng.serve(_requests(cfg.vocab_size, lens, plans=["k1", "base"]))
+        first = buckets()
+        assert all(k[0] == ("bucket", 2, 2) for k in first)
+        eng.serve(_requests(cfg.vocab_size, lens, plans=["k12", "base"]))
+        assert buckets() == first
+
+    def test_unknown_plan_rejected(self, setup):
+        cfg, params = setup
+        eng = _plans_engine(cfg, params)
+        out = eng.serve(_requests(cfg.vocab_size, (5,), plans=["nope"]))
+        assert out[0].finished_reason == "rejected_unknown_plan"
+        assert out[0].tokens == []
+
+
+class TestBackCompat:
+    def test_serve_plan_equals_per_request_stamping(self, setup):
+        """serve(reqs, plan=) is byte-identical to stamping the plan on
+        every request -- the engine-global API is a thin wrapper."""
+        cfg, params = setup
+        eng = _plans_engine(cfg, params)
+        lens = (5, 9, 13)
+        via_serve = eng.serve(_requests(cfg.vocab_size, lens), plan="k1")
+        via_req = eng.serve(_requests(cfg.vocab_size, lens,
+                                      plans=["k1"] * 3))
+        assert ([r.tokens for r in via_serve]
+                == [r.tokens for r in via_req])
+        assert all(r.served_plan == "k1" for r in via_serve)
+
+    def test_set_plan_then_submit_serves_that_plan(self, setup):
+        cfg, params = setup
+        eng = _plans_engine(cfg, params)
+        lens = (5, 9)
+        ref = eng.serve(_requests(cfg.vocab_size, lens), plan="k12")
+        eng.reset_stats()
+        eng.set_plan("k12")
+        for r in _requests(cfg.vocab_size, lens):
+            eng.submit(r)
+        out = eng.drain()
+        assert [r.tokens for r in sorted(out, key=lambda r: r.uid)] \
+            == [r.tokens for r in ref]
+        assert all(r.served_plan == "k12" for r in out)
+
+    def test_request_plan_overrides_serve_default(self, setup):
+        cfg, params = setup
+        eng = _plans_engine(cfg, params)
+        lens = (5, 9)
+        out = eng.serve(_requests(cfg.vocab_size, lens,
+                                  plans=["k1", None]), plan="k21")
+        assert out[0].plan == "k1" and out[1].plan == "k21"
+        solo = eng.serve([_requests(cfg.vocab_size, lens)[0]], plan="k1")
+        assert out[0].tokens == solo[0].tokens
+
+
+class TestDegradation:
+    def _pressured(self, cfg, params, **extra):
+        """Two slots, ladder base -> k1, queue pressure from the start."""
+        eng = _plans_engine(cfg, params, max_batch=2,
+                            degrade_under_pressure=True, **extra)
+        eng.set_plan_ladder(("base", "k1"))
+        return eng
+
+    def test_queue_pressure_degrades_one_rung(self, setup):
+        cfg, params = setup
+        eng = self._pressured(cfg, params)
+        lens = (5, 9, 13, 7, 6, 11)
+        out = eng.serve(_requests(cfg.vocab_size, lens))
+        degraded = [r for r in out if r.served_plan == "k1"]
+        assert degraded, "queue pressure admitted nobody on a cheaper rung"
+        assert eng.stats["plan_degradations"] == sum(
+            r.plan_degradations for r in out)
+        for r in out:
+            assert r.plan == "base"             # requested plan is kept
+            assert r.plan_degradations <= 1     # one rung per admission
+        # degraded-at-first-admission requests are exactly what a solo
+        # k1 engine produces: degradation rides the prefill boundary,
+        # so a fresh request's whole lifetime runs under the new rung
+        cfg_p, params_p = apply_plan_params(params, cfg,
+                                            uniform_plan(cfg, 1))
+        solo = Engine(cfg_p, params_p, **EKW)
+        for r in degraded:
+            if r.preemptions:
+                continue        # resumed mid-stream: mixed-rung history
+            ref = solo.serve(
+                [_requests(cfg.vocab_size, lens)[r.uid]])
+            assert r.tokens == ref[0].tokens, r.uid
+
+    def test_priority_requests_are_exempt(self, setup):
+        cfg, params = setup
+        eng = self._pressured(cfg, params)
+        lens = (5, 9, 13, 7, 6, 11)
+        out = eng.serve(_requests(cfg.vocab_size, lens, priority=1))
+        assert all(r.served_plan == "base" for r in out)
+        assert eng.stats["plan_degradations"] == 0
+
+    def test_no_ladder_no_degradation(self, setup):
+        """degrade_under_pressure without a declared ladder is inert."""
+        cfg, params = setup
+        eng = _plans_engine(cfg, params, max_batch=2,
+                            degrade_under_pressure=True)
+        out = eng.serve(_requests(cfg.vocab_size, (5, 9, 13, 7)))
+        assert all(r.served_plan == "base" for r in out)
+
+    def test_ladder_validates_names(self, setup):
+        cfg, params = setup
+        eng = _plans_engine(cfg, params)
+        with pytest.raises(ValueError, match="unknown plan"):
+            eng.set_plan_ladder(("base", "missing"))
+
+    def test_degraded_resume_recomputes_under_new_rung(self, setup):
+        """Preemption + degradation: a resume that lands on a cheaper
+        rung misses the old rung's salt, so its whole fill is recomputed
+        under the new plan -- never a live-cache mutation.  Pinned
+        indirectly: the tight-pool workload must stay self-consistent
+        (every degradation accounted, pool fully drained)."""
+        cfg, params = setup
+        eng = self._pressured(cfg, params, page_size=4, num_pages=14,
+                              prefix_cache=True)
+        out = eng.serve(_requests(cfg.vocab_size, (12, 14, 13, 11),
+                                  max_new=8, seed=5), max_steps=2000)
+        assert eng.stats["plan_degradations"] == sum(
+            r.plan_degradations for r in out)
+        for r in out:
+            assert r.served_plan in ("base", "k1")
+            if r.plan_degradations:
+                assert r.served_plan == "k1"
+        assert eng.kv.stats["pages_in_use"] == 0
+        assert eng.sched.done()
+
+
+class TestIncrementalDetok:
+    def test_deltas_concatenate_to_full_detok(self, setup):
+        cfg, params = setup
+        deltas: dict = {0: [], 1: []}
+        reqs = _requests(cfg.vocab_size, (5, 9), detok=True,
+                         stream=lambda uid, d: deltas[uid].append(d))
+        eng = _plans_engine(cfg, params)
+        out = eng.serve(reqs)
+        for r in out:
+            assert r.tokens, "workload generated nothing to stream"
+            assert "".join(deltas[r.uid]) == default_decode(r.tokens)
+            assert r.text == default_decode(r.tokens)
+
+    def test_custom_decode_fn_and_serve_level_opt_in(self, setup):
+        cfg, params = setup
+        decode = lambda ids: " ".join(str(i) for i in ids) + " "
+        deltas: dict = {0: []}
+        reqs = _requests(cfg.vocab_size, (6,),
+                         stream=lambda uid, d: deltas[uid].append(d))
+        eng = _plans_engine(cfg, params)
+        out = eng.serve(reqs, detok=decode)     # stamped at serve level
+        assert "".join(deltas[0]) == decode(out[0].tokens) == out[0].text
+
+    def test_detok_off_streams_token_ids(self, setup):
+        cfg, params = setup
+        seen: list = []
+        reqs = _requests(cfg.vocab_size, (6,),
+                         stream=lambda uid, tok: seen.append(tok))
+        eng = _plans_engine(cfg, params)
+        out = eng.serve(reqs)
+        assert seen == out[0].tokens
+        assert out[0].text == ""
+
+    def test_non_prefix_monotone_decode_raises(self):
+        dk = IncrementalDetok(lambda ids: str(ids[-1]))
+        dk.push(12)
+        with pytest.raises(ValueError, match="prefix-monotone"):
+            dk.push(3)
+
+    def test_incremental_detok_unit(self):
+        dk = IncrementalDetok()
+        assert dk.push(1) == "<1>"
+        assert dk.push(42) == "<42>"
+        assert dk.text == "<1><42>"
+
+
+class TestPerPlanObservability:
+    def test_per_plan_counters(self, setup):
+        cfg, params = setup
+        eng = _plans_engine(cfg, params)
+        out = eng.serve(_requests(cfg.vocab_size, (5, 9, 13),
+                                  plans=["k1", "k1", "base"]))
+        s = eng.stats
+        assert s["plan_requests:k1"] == 2
+        assert s["plan_requests:base"] == 1
+        decode_total = sum(v for k, v in s.items()
+                           if k.startswith("plan_decode_tokens:"))
+        assert decode_total == s["decode_tokens"]
+        ps = eng.plan_stats()
+        assert ps["k1"]["plan_requests"] == 2
+        assert sum(d["plan_requests"] for d in ps.values()) == len(out)

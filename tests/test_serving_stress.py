@@ -3,8 +3,10 @@ KV pool pressure (DESIGN.md §6).
 
 Hypothesis-driven fuzz over (prompt lengths, max_new, EOS timing, batch
 size, page size, pool size down to the prompt-only minimum, fifo/sjf,
-LExI plan on/off, and -- in TestArrivalStress -- drawn arrival offsets
-on a virtual clock).  Every workload is checked against three invariants:
+LExI plan mode -- off / engine-wide / *per-request mixed* draws over
+three distinct plans (DESIGN.md §10) -- and, in TestArrivalStress, drawn
+arrival offsets on a virtual clock).  Every workload is checked against
+three invariants:
 
 1. **Oracle equivalence** -- per-request tokens (and finish reasons) are
    byte-identical to an engine with an unlimited pool; requests whose
@@ -57,6 +59,19 @@ MNEW_MAX = 8
 PAGE_SIZES = (4, 8)
 POLICIES = ("fifo", "sjf")
 STEP_BOUND = 1500
+#: plan modes: engine default only, engine-wide LExI plan, or
+#: per-request mixed draws over three distinct plans in one batch
+PLAN_POOL = ("base", "lexi", "steep")
+
+
+def _plan_mode(mode: int, workload_kw: dict) -> dict:
+    """mode 0 = base, 1 = engine-wide 'lexi', 2 = per-request mixed
+    (mutates workload_kw to draw each request's plan).  Returns the
+    serve() kwargs."""
+    if mode == 2:
+        workload_kw["plan_names"] = PLAN_POOL
+        return {}
+    return {"plan": "lexi"} if mode == 1 else {}
 
 
 def _pool_options(page_size: int):
@@ -108,27 +123,32 @@ def _engine(batch, page_size=8, pool_idx=3, policy="fifo",
                      scheduler=policy, prefix_cache=prefix_cache,
                      clock=VirtualClock() if virtual else None)
         eng.add_plan("lexi", _STATE["plan"])
+        eng.add_plan("steep", (1, 2))   # layer-heterogeneous third plan
         _STATE["engines"][key] = eng
     return _STATE["engines"][key]
 
 
-def _workload(vocab: int, n_req: int, seed: int, streams=None):
+def _workload(vocab: int, n_req: int, seed: int, streams=None,
+              plan_names=None):
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_req):
         plen = int(rng.integers(1, PLEN_MAX + 1))
         mnew = int(rng.integers(0, MNEW_MAX + 1))
+        plan = (plan_names[int(rng.integers(0, len(plan_names)))]
+                if plan_names else None)
         stream = None
         if streams is not None:
             streams[i] = []
             stream = (lambda uid, tok, s=streams: s[uid].append(tok))
         reqs.append(Request(uid=i,
                             prompt=rng.integers(0, vocab, plen).astype(np.int32),
-                            max_new_tokens=mnew, stream=stream))
+                            max_new_tokens=mnew, stream=stream, plan=plan))
     return reqs
 
 
-def _prefix_workload(vocab: int, n_req: int, seed: int, streams=None):
+def _prefix_workload(vocab: int, n_req: int, seed: int, streams=None,
+                     plan_names=None):
     """Random prefix-family tree: requests draw a shared head, cut it at a
     random depth, and append a private suffix -- so prompts share page
     chains of varying length (full-page, mid-page/COW, and no overlap)."""
@@ -142,13 +162,15 @@ def _prefix_workload(vocab: int, n_req: int, seed: int, streams=None):
         sfx = rng.integers(0, vocab,
                            int(rng.integers(0, 4))).astype(np.int32)
         prompt = np.concatenate([head[:cut], sfx])[:PLEN_MAX]
+        plan = (plan_names[int(rng.integers(0, len(plan_names)))]
+                if plan_names else None)
         stream = None
         if streams is not None:
             streams[i] = []
             stream = (lambda uid, tok, s=streams: s[uid].append(tok))
         reqs.append(Request(uid=i, prompt=prompt,
                             max_new_tokens=int(rng.integers(0, MNEW_MAX + 1)),
-                            stream=stream))
+                            stream=stream, plan=plan))
     return reqs
 
 
@@ -160,26 +182,28 @@ class TestServingStress:
            st.integers(2, 3),                      # max_batch
            st.integers(1, 6),                      # request count
            st.integers(0, 3),                      # eos timing (0 = none)
-           st.booleans(),                          # LExI plan on/off
+           st.integers(0, 2),                      # plan mode (2 = mixed)
            st.integers(0, 10**6))                  # workload seed
     def test_invariants_under_pool_pressure(self, page_idx, pool_idx,
                                             policy_idx, batch, n_req,
-                                            eos_mode, plan_on, seed):
+                                            eos_mode, plan_mode, seed):
         cfg = _setup()
         page_size = PAGE_SIZES[page_idx]
-        plan_kw = {"plan": "lexi"} if plan_on else {}
+        wl_kw: dict = {}
+        plan_kw = _plan_mode(plan_mode, wl_kw)
 
         # oracle: same workload, unlimited pool (no preemption possible)
         oracle = _engine(batch)
         oracle.eos_id = None
-        probe = oracle.serve(_workload(cfg.vocab_size, n_req, seed),
+        probe = oracle.serve(_workload(cfg.vocab_size, n_req, seed, **wl_kw),
                              max_steps=STEP_BOUND, **plan_kw)
         eos_id = None
         generated = [t for r in probe for t in r.tokens]
         if eos_mode and generated:
             eos_id = int(generated[(eos_mode * 7) % len(generated)])
             oracle.eos_id = eos_id
-            ref = oracle.serve(_workload(cfg.vocab_size, n_req, seed),
+            ref = oracle.serve(_workload(cfg.vocab_size, n_req, seed,
+                                         **wl_kw),
                                max_steps=STEP_BOUND, **plan_kw)
         else:
             ref = probe
@@ -188,7 +212,8 @@ class TestServingStress:
         eng.eos_id = eos_id
         streams = {}
         # invariant 3 rides on max_steps: livelock raises RuntimeError
-        out = eng.serve(_workload(cfg.vocab_size, n_req, seed, streams),
+        out = eng.serve(_workload(cfg.vocab_size, n_req, seed, streams,
+                                  **wl_kw),
                         max_steps=STEP_BOUND, **plan_kw)
 
         # invariant 1: oracle equivalence (capacity refusals excluded)
@@ -197,7 +222,8 @@ class TestServingStress:
             if r.finished_reason == "rejected_kv_capacity":
                 worst = eng.kv.pages_needed(
                     r.prompt_len + next(q.max_new_tokens for q in
-                                        _workload(cfg.vocab_size, n_req, seed)
+                                        _workload(cfg.vocab_size, n_req,
+                                                  seed, **wl_kw)
                                         if q.uid == r.uid))
                 assert worst > usable, "refusal without a capacity reason"
                 continue
@@ -231,30 +257,34 @@ class TestPrefixCacheStress:
            st.integers(0, 1),                      # fifo / sjf
            st.integers(2, 3),                      # max_batch
            st.integers(1, 6),                      # request count
-           st.booleans(),                          # LExI plan on/off
+           st.integers(0, 2),                      # plan mode (2 = mixed)
            st.integers(0, 10**6))                  # workload seed
     def test_shared_prefix_workloads(self, page_idx, pool_idx, policy_idx,
-                                     batch, n_req, plan_on, seed):
+                                     batch, n_req, plan_mode, seed):
         """Prefix-family trees under pool pressure with preemption
         interleaved: cache-on outputs byte-identical to the cache-off
         oracle, streams fire exactly once, the refcounted pool fully
         drains, and no write ever lands in a refcount>1 page (the engine
         asserts privacy before every chunk/decode write, so that
-        invariant rides every example here for free)."""
+        invariant rides every example here for free).  Mixed plan mode
+        also exercises per-request salting: same-prompt requests on
+        different plans must never share pages."""
         cfg = _setup()
         page_size = PAGE_SIZES[page_idx]
-        plan_kw = {"plan": "lexi"} if plan_on else {}
+        wl_kw: dict = {}
+        plan_kw = _plan_mode(plan_mode, wl_kw)
 
         oracle = _engine(batch)                   # cache off, unlimited
         oracle.eos_id = None
-        ref = oracle.serve(_prefix_workload(cfg.vocab_size, n_req, seed),
+        ref = oracle.serve(_prefix_workload(cfg.vocab_size, n_req, seed,
+                                            **wl_kw),
                            max_steps=STEP_BOUND, **plan_kw)
 
         eng = _engine(batch, page_size, pool_idx, POLICIES[policy_idx],
                       prefix_cache=True)
         streams = {}
         out = eng.serve(_prefix_workload(cfg.vocab_size, n_req, seed,
-                                         streams),
+                                         streams, **wl_kw),
                         max_steps=STEP_BOUND, **plan_kw)
 
         usable = eng.kv.num_pages - 1
@@ -293,11 +323,11 @@ class TestArrivalStress:
            st.integers(0, 1),                      # fifo / sjf
            st.integers(2, 3),                      # max_batch
            st.integers(2, 6),                      # request count
-           st.booleans(),                          # LExI plan on/off
+           st.integers(0, 2),                      # plan mode (2 = mixed)
            st.integers(0, 10**6))                  # workload seed
     def test_open_loop_arrivals_match_closed_loop(self, page_idx, pool_idx,
                                                   policy_idx, batch, n_req,
-                                                  plan_on, seed):
+                                                  plan_mode, seed):
         """Open-loop serves (drawn arrival offsets on a virtual clock) are
         byte-identical to the closed-loop all-at-t=0 unlimited-pool oracle:
         greedy decoding is batch-composition independent, so WHEN a request
@@ -307,21 +337,23 @@ class TestArrivalStress:
         pool/uid drain invariants."""
         cfg = _setup()
         page_size = PAGE_SIZES[page_idx]
-        plan_kw = {"plan": "lexi"} if plan_on else {}
+        wl_kw: dict = {}
+        plan_kw = _plan_mode(plan_mode, wl_kw)
         rng = np.random.default_rng(seed ^ 0x5EED)
         # deliberately unsorted: submit() must order arrivals itself
         offsets = [float(t) for t in rng.integers(0, 40, n_req)]
 
         oracle = _engine(batch)
         oracle.eos_id = None
-        ref = oracle.serve(_workload(cfg.vocab_size, n_req, seed),
+        ref = oracle.serve(_workload(cfg.vocab_size, n_req, seed, **wl_kw),
                            max_steps=STEP_BOUND, **plan_kw)
 
         eng = _engine(batch, page_size, pool_idx, POLICIES[policy_idx],
                       virtual=True)
         eng.eos_id = None
         streams = {}
-        out = eng.serve(_workload(cfg.vocab_size, n_req, seed, streams),
+        out = eng.serve(_workload(cfg.vocab_size, n_req, seed, streams,
+                                  **wl_kw),
                         max_steps=STEP_BOUND, arrival_times=offsets,
                         **plan_kw)
 
