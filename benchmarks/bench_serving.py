@@ -34,6 +34,12 @@ capacity: goodput (completed tok/s over the makespan) and TTFT p50/p95
 per load point -- the arrival-queue blow-up past capacity is the curve
 closed-loop cells cannot show.
 
+An admission-policy ablation (DESIGN.md §11) reruns the open-loop
+driver on a ~0.5x pool with the four admission gates (headroom /
+watermark / lookahead / greedy): paired arrival replays, outputs
+asserted token-identical, goodput + TTFT-p95 + preemptions per
+(policy, offered load).
+
 Per-request plans (DESIGN.md §10) get two cells: a mixed-plan wave
 (alternating base/lexi on the fused engine, served by the bucketed-k
 graphs) in the main grid, and a ``plan_pareto`` ablation pitting static
@@ -117,7 +123,9 @@ def _interleaved_serves(cells, vocab: int, n_req: int, *, reps: int,
         keys = set().union(*(s.keys() for s in reps_stats[name]))
         stats = {k: float(np.median([s[k] for s in reps_stats[name]
                                      if k in s])) for k in keys}
-        out[name] = (toks[name] / med, stats, med)
+        # zero median wall (virtual clock / degenerate cell) reports
+        # 0 tok/s, never NaN/inf -- these flow into JSON artifacts
+        out[name] = (toks[name] / med if med > 0 else 0.0, stats, med)
     return out
 
 
@@ -370,7 +378,7 @@ def _prefix_reuse_ablation(cfg, params, csv: CSV, *, fast: bool) -> dict:
            "outputs_byte_identical": True, "cells": {}}
     tput, ttft = {}, {}
     for (r, on), eng in engines.items():
-        med = float(np.median(walls[(r, on)]))
+        med = max(float(np.median(walls[(r, on)])), 1e-9)
         s = stats_hist[(r, on)][-1]
         delivered = (s["prefill_tokens"] + s["prefix_hit_tokens"]
                      + s["decode_tokens"])
@@ -450,7 +458,7 @@ def _open_loop_ablation(cfg, params, csv: CSV, *, fast: bool) -> dict:
     for _ in range(reps):
         eng.serve(make_requests())
         closed.append(dict(eng.stats))
-    closed_wall = float(np.median([s["wall_s"] for s in closed]))
+    closed_wall = max(float(np.median([s["wall_s"] for s in closed])), 1e-9)
     tok = closed[-1]["prefill_tokens"] + closed[-1]["decode_tokens"]
     closed_tps = tok / closed_wall
     cap_rps = n_req / closed_wall       # requests/s at saturation
@@ -476,7 +484,7 @@ def _open_loop_ablation(cfg, params, csv: CSV, *, fast: bool) -> dict:
             s = eng.stats
             rows.append({
                 "goodput": (s["prefill_tokens"] + s["decode_tokens"])
-                           / s["wall_s"],
+                           / max(s["wall_s"], 1e-9),
                 "wall": s["wall_s"],
                 "ttft_p50": s.get("ttft_p50_s", 0.0),
                 "ttft_p95": s.get("ttft_p95_s", 0.0),
@@ -495,6 +503,118 @@ def _open_loop_ablation(cfg, params, csv: CSV, *, fast: bool) -> dict:
             "prefix_hit_rate": round(med["hit"], 3)}
         csv.add(f"serving/open_loop_{frac}x", med["wall"] * 1e6,
                 f"goodput_tok_per_s={med['goodput']:.1f}")
+    return abl
+
+
+def _admission_policy_ablation(cfg, params, csv: CSV, *, fast: bool) -> dict:
+    """Admission-gate policies under open-loop pressure (DESIGN.md §11).
+
+    The on-demand paged engine admits a waiting request only while the
+    pool keeps *headroom* free pages behind -- the gate is what separates
+    "admit and preempt later" from "wait for room".  Four policies, same
+    engine otherwise:
+
+      * ``headroom``  -- 1 free page per decoding slot (the default):
+        every decoder can take its next-page fault without an eviction;
+      * ``watermark`` -- a static reserve (25% of the pool) independent
+        of occupancy: simple, but over-reserves at low concurrency and
+        under-reserves at high;
+      * ``lookahead`` -- the exact pages decoding slots will claim
+        within the next page worth of steps, bounded by each slot's
+        remaining budget: admits everything headroom does and more
+        (slots mid-page or near completion need no reserve);
+      * ``greedy``    -- no gate (reserve 0): the thrash baseline, every
+        shortfall is paid as preempt-and-recompute instead.
+
+    Method: pool at ~0.5x the worst-case reservation, capacity
+    calibrated closed-loop on the headroom engine, then Poisson arrivals
+    at offered = {0.5, 1, 2}x capacity ({1, 2}x under --fast).  Every
+    policy replays the *same* arrival offsets per rep (paired, so the
+    arrival draw is never the difference), outputs are asserted
+    token-identical across policies every serve (gates move WHEN work is
+    admitted, never WHAT it generates), and goodput / TTFT-p95 /
+    preemptions land per (policy, load) -- the goodput/latency curves
+    the ROADMAP has carried since the preemption PR.
+    """
+    from repro.serving import ADMISSION_POLICIES
+
+    page, max_batch, max_new = 8, 4, 10
+    n_req = 12 if fast else 24
+    reps = 2 if fast else 3
+
+    def make_requests(seed=31):
+        rng = np.random.default_rng(seed)
+        return [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            int(rng.integers(8, 29))
+                                            ).astype(np.int32),
+                        max_new_tokens=max_new)
+                for i in range(n_req)]
+
+    lens = [len(r.prompt) for r in make_requests()]
+    per_req = sorted((-(-(n + max_new) // page) for n in lens), reverse=True)
+    worst = sum(per_req[:max_batch])
+    pool = max(per_req[0] + 1, int(round(0.5 * worst)))
+    ekw = dict(max_batch=max_batch, max_len=64, prefill_pad=16,
+               cache_layout="paged", page_size=page, num_pages=pool)
+    engines = {pol: Engine(cfg, params, admission=pol, **ekw)
+               for pol in ADMISSION_POLICIES}
+
+    for eng in engines.values():                        # compile warmup
+        eng.serve(make_requests())
+    closed = []
+    for _ in range(reps):
+        engines["headroom"].serve(make_requests())
+        closed.append(dict(engines["headroom"].stats))
+    closed_wall = max(float(np.median([s["wall_s"] for s in closed])), 1e-9)
+    cap_rps = n_req / closed_wall
+
+    fracs = (1.0, 2.0) if fast else (0.5, 1.0, 2.0)
+    abl = {"requests": n_req, "max_batch": max_batch, "page_size": page,
+           "pool_pages": pool, "worst_case_pages": worst,
+           "max_new": max_new,
+           "capacity_req_per_s": round(cap_rps, 2),
+           "method": "paired Poisson arrival replays at offered = frac x "
+                     "closed-loop capacity; outputs asserted token-"
+                     f"identical across policies; medians over {reps} "
+                     "serves per (policy, load)",
+           "policies": list(ADMISSION_POLICIES), "load_points": {}}
+    arr_rng = np.random.default_rng(37)
+    for frac in fracs:
+        rate = frac * cap_rps
+        rows = {pol: [] for pol in engines}
+        for _ in range(reps):
+            # ONE arrival draw, replayed for every policy: paired cells
+            offsets = [float(t) for t in
+                       np.cumsum(arr_rng.exponential(1.0 / rate, n_req))]
+            outs = {}
+            for pol, eng in engines.items():
+                res = eng.serve(make_requests(), arrival_times=offsets)
+                outs[pol] = [r.tokens for r in res]
+                s = eng.stats
+                rows[pol].append({
+                    "goodput": (s["prefill_tokens"] + s["decode_tokens"])
+                               / max(s["wall_s"], 1e-9),
+                    "ttft_p50": s.get("ttft_p50_s", 0.0),
+                    "ttft_p95": s.get("ttft_p95_s", 0.0),
+                    "preempt": s["preemptions"],
+                    "recompute": s["recompute_tokens"]})
+                assert outs[pol] == outs["headroom"], \
+                    f"admission policy {pol} changed outputs at {frac}x"
+        abl["load_points"][f"{frac}x"] = {
+            "offered_req_per_s": round(rate, 2), "policies": {}}
+        for pol in engines:
+            med = {k: float(np.median([r[k] for r in rows[pol]]))
+                   for k in rows[pol][0]}
+            abl["load_points"][f"{frac}x"]["policies"][pol] = {
+                "goodput_tok_per_s": round(med["goodput"], 2),
+                "ttft_p50_s": round(med["ttft_p50"], 5),
+                "ttft_p95_s": round(med["ttft_p95"], 5),
+                "preemptions": int(med["preempt"]),
+                "recompute_tokens": int(med["recompute"])}
+            csv.add(f"serving/admission_{pol}_{frac}x",
+                    med["ttft_p95"] * 1e6,
+                    f"goodput_tok_per_s={med['goodput']:.1f}")
     return abl
 
 
@@ -786,6 +906,11 @@ def run(csv: CSV, *, fast: bool = False, expert_dtype: str = "int8") -> None:
     # open-loop Poisson arrivals: goodput + TTFT tails across an offered-
     # load sweep around closed-loop capacity (DESIGN.md §9)
     out["open_loop"] = _open_loop_ablation(cfg, params, csv, fast=fast)
+
+    # admission-gate policies (headroom/watermark/lookahead/greedy) on a
+    # pressured pool under the same open-loop driver (DESIGN.md §11)
+    out["admission_policy"] = _admission_policy_ablation(cfg, params, csv,
+                                                         fast=fast)
 
     # static plan ladder vs pressure-adaptive degradation on the
     # quality/throughput plane (DESIGN.md §10)

@@ -123,6 +123,12 @@ def main() -> int:
                          "matters with a temperature > 0)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--scheduler", choices=["fifo", "sjf"], default="fifo")
+    ap.add_argument("--admission", default="headroom",
+                    help="admission gate for on-demand paged pools: headroom "
+                         "(1 free page per decoding slot), watermark (static "
+                         "free-page reserve), lookahead (exact pages decoding "
+                         "slots claim within the next page worth of steps), "
+                         "or greedy (no gate; thrash baseline)")
     ap.add_argument("--open-loop-rate", type=float, default=0.0,
                     help="offered load in requests/s: requests arrive on a "
                          "Poisson process at this rate instead of all at "
@@ -168,6 +174,7 @@ def main() -> int:
                  router_lookahead=args.router_lookahead or None,
                  prefix_cache=args.prefix_cache,
                  scheduler=args.scheduler,
+                 admission=args.admission,
                  degrade_under_pressure=args.degrade_under_pressure)
     def arrivals():
         if args.open_loop_rate <= 0:

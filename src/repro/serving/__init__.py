@@ -1,5 +1,6 @@
 from repro.serving.clock import Clock, VirtualClock, WallClock  # noqa: F401
-from repro.serving.engine import Engine  # noqa: F401
+from repro.serving.engine import ADMISSION_POLICIES, Engine  # noqa: F401
+from repro.serving.http import ApiServer  # noqa: F401
 from repro.serving.kv_cache import KVCache  # noqa: F401
 from repro.serving.prefix_cache import PrefixIndex  # noqa: F401
 from repro.serving.request import Request, Result  # noqa: F401

@@ -55,8 +55,9 @@ the per-request prefix-cache salt makes the old rung's pages a miss.
 from __future__ import annotations
 
 import heapq
+import math
 from dataclasses import replace
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +78,12 @@ from repro.serving.scheduler import DECODE, DONE, PREFILL, Scheduler, \
 
 _CHUNKABLE_KINDS = ("attn_mlp", "attn_moe", "shared_attn")
 
+#: admission-gate policies for on-demand paged admission (DESIGN.md §11):
+#: how many free pages an admission must leave behind for the slots
+#: already decoding, so admitting a newcomer does not just preempt it
+#: right back out (admit -> evict -> recompute churn)
+ADMISSION_POLICIES = ("headroom", "watermark", "lookahead", "greedy")
+
 
 def _supports_paging(cfg: ModelConfig) -> bool:
     return (not cfg.is_encoder_decoder
@@ -95,7 +102,10 @@ class Engine:
                  router_lookahead: Optional[bool] = None,
                  preemption: Optional[bool] = None,
                  prefix_cache: bool = False,
-                 scheduler: str = "fifo", truncate_prompts: bool = False,
+                 scheduler: str = "fifo",
+                 admission: str = "headroom",
+                 admission_watermark: float = 0.25,
+                 truncate_prompts: bool = False,
                  degrade_under_pressure: bool = False,
                  degrade_watermark: float = 0.25,
                  eos_id: Optional[int] = None, opts: ModelOpts = DEFAULT_OPTS,
@@ -153,6 +163,17 @@ class Engine:
             raise ValueError("preemption manages the paged pool; it needs "
                              "cache_layout='paged'")
         self.ondemand = bool(preemption)
+        # admission gate policy (DESIGN.md §11): what an on-demand
+        # admission must leave free for the already-decoding slots
+        if admission not in ADMISSION_POLICIES:
+            raise ValueError(f"admission={admission!r}; "
+                             f"want one of {ADMISSION_POLICIES}")
+        if admission != "headroom" and not self.ondemand:
+            raise ValueError("admission policies gate on-demand paged "
+                             "admission; they need preemption=True "
+                             "(whole-lifetime reservation never over-admits)")
+        self.admission = admission
+        self.admission_watermark = float(admission_watermark)
         # prefix caching (DESIGN.md §8): hash-cons full KV pages so a new
         # request's admission maps already-computed prefix pages into its
         # block table and chunked prefill starts at the first uncached
@@ -340,30 +361,42 @@ class Engine:
     # Submission
     # ------------------------------------------------------------------ #
     def submit(self, req: Request, *,
-               arrival_time: Optional[float] = None) -> None:
+               arrival_time: Optional[float] = None,
+               detok: Union[bool, Callable] = False) -> None:
         """Enqueue a request for admission at ``arrival_time`` (clock
         units; ``None`` = now).  The open-loop entry point: requests may
         be submitted at any moment -- including while other requests are
         mid-prefill or mid-decode -- and enter the scheduler when the
         clock reaches their arrival time.  Validation (prompt length, KV
         capacity) happens at release, producing a rejected ``Result``
-        rather than an exception."""
+        rather than an exception.  ``detok`` is the workload-default
+        incremental-detok mode, applied only when the request did not opt
+        in itself; it is stamped on the engine-internal ``Tracked``
+        record, never on the caller-owned ``Request`` (a request list
+        reused across workloads must come back unchanged)."""
         if req.uid in self._pending_uids or req.uid in self.sched._uids:
             raise duplicate_uid_error(req.uid)
         t = self.clock.now() if arrival_time is None else float(arrival_time)
-        heapq.heappush(self._pending, (t, self._pending_seq, req))
+        heapq.heappush(self._pending, (t, self._pending_seq, req, detok))
         self._pending_seq += 1
         self._pending_uids.add(req.uid)
 
     def _release_arrivals(self) -> None:
         """Move every due arrival into the scheduler (arrival order)."""
         while self._pending and self._pending[0][0] <= self.clock.now():
-            t_arr, _, req = heapq.heappop(self._pending)
+            t_arr, _, req, detok = heapq.heappop(self._pending)
             self._pending_uids.discard(req.uid)
-            self._submit(req, t_arrival=t_arr)
+            self._submit(req, t_arrival=t_arr, detok_default=detok)
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest scheduled arrival still pending (None when empty) --
+        what an external pump (the HTTP server) sleeps toward when
+        nothing is runnable."""
+        return self._pending[0][0] if self._pending else None
 
     def _submit(self, req: Request,
-                t_arrival: Optional[float] = None) -> Tracked:
+                t_arrival: Optional[float] = None,
+                detok_default: Union[bool, Callable] = False) -> Tracked:
         t = self.sched.submit(req, t_submit=t_arrival)
         # resolve the plan once, at submission: a per-request plan wins,
         # otherwise the serve/engine default -- so serve(reqs, plan=) and
@@ -371,8 +404,12 @@ class Engine:
         t.plan = t.served_plan = (req.plan if req.plan is not None
                                   else self.plan_name)
         t.result.plan = t.result.served_plan = t.plan
-        if req.detok:
-            t.detok = (IncrementalDetok(req.detok) if callable(req.detok)
+        # the workload default applies only where the request itself did
+        # not opt in, and lands on the Tracked record: the Request object
+        # stays caller-owned state, not an engine scratchpad
+        detok = req.detok if req.detok else detok_default
+        if detok:
+            t.detok = (IncrementalDetok(detok) if callable(detok)
                        else IncrementalDetok())
         limit = self.max_len - 1
         if t.prompt_len == 0:
@@ -405,6 +442,47 @@ class Engine:
         recomputes everything under the new plan."""
         return (served_plan, self.expert_dtype)
 
+    def _admission_headroom(self) -> int:
+        """Free pages an admission must leave for slots already decoding,
+        per the engine's admission policy (on-demand paging only).
+
+        Admitting into the live slots' growth budget just preempts the
+        newcomer right back out -- admit -> evict -> recompute churn that
+        burns prefill work without finishing anyone -- so every policy
+        except ``greedy`` holds some reserve back:
+
+        * ``headroom`` (default): one page per decoding slot -- each may
+          cross a page boundary within page_size steps (the anti-thrash
+          heuristic DESIGN.md §6 introduced).
+        * ``watermark``: a static reserve, ``admission_watermark`` of the
+          pool -- independent of live state, so it neither adapts to a
+          mostly-prefilling batch nor collapses when slots sit far from
+          their next boundary.
+        * ``lookahead``: the exact short-horizon need -- pages each
+          decoding slot will claim within the next ``page_size`` steps,
+          bounded by its remaining token budget.  Never more than
+          ``headroom`` (<= one boundary per slot per page_size steps),
+          so it admits at least as aggressively while still covering
+          imminent growth.
+        * ``greedy``: no reserve (the thrash baseline the others beat).
+        """
+        if self.admission == "greedy":
+            return 0
+        decoding = self.sched.in_state(DECODE)
+        if self.admission == "headroom":
+            return len(decoding)
+        if self.admission == "watermark":
+            total = self.kv.num_pages - 1       # minus the trash page
+            return math.ceil(self.admission_watermark * total)
+        need = 0                                # "lookahead"
+        for t in decoding:
+            have = int(self.slot_pos[t.slot]) + 1   # positions covered now
+            horizon = min(self.kv.page_size,
+                          max(int(self.slot_budget[t.slot]), 0))
+            need += (self.kv.pages_needed(have + horizon)
+                     - self.kv.pages_needed(have))
+        return need
+
     def _admit(self) -> None:
         def can_allocate(slot: int, t: Tracked) -> bool:
             served = self._degraded_rung(t)
@@ -412,12 +490,8 @@ class Engine:
                 # reserve only what this admission's prefill will write:
                 # the prompt, plus generated-so-far minus the pending
                 # token on resume.  Decode growth is allocate_append's
-                # job.  Headroom gate (anti-thrash): admitting must leave
-                # one free page per already-decoding slot -- each may
-                # cross a page boundary within page_size steps, and
-                # admitting into their growth budget just preempts the
-                # newcomer right back out (admit -> evict -> recompute
-                # churn that burns prefill work without finishing anyone).
+                # job; what must stay free for the already-decoding slots
+                # is the admission policy's call (_admission_headroom).
                 gen = t.result.tokens
                 fill = (np.concatenate([t.prompt,
                                         np.asarray(gen[:-1], np.int32)])
@@ -443,7 +517,7 @@ class Engine:
                 cow = 1 if hit % self.kv.page_size else 0
                 cost = (self.kv.pages_needed(n)
                         - self.kv.live_count(shared[:len(shared) - cow]))
-                headroom = len(self.sched.in_state(DECODE))
+                headroom = self._admission_headroom()
                 if self.kv.free_pages() < cost + headroom:
                     return False
                 if not self.kv.allocate(slot, n, shared=shared,
@@ -762,7 +836,7 @@ class Engine:
         for t in list(self.sched.waiting):
             self.sched.reject(t, reason)
         while self._pending:    # future arrivals reject without admission
-            _, _, req = heapq.heappop(self._pending)
+            _, _, req, _ = heapq.heappop(self._pending)
             self._pending_uids.discard(req.uid)
             self.sched.reject(self.sched.submit(req), reason)
 
@@ -793,6 +867,44 @@ class Engine:
             raise RuntimeError("cannot reset stats with requests in flight")
         self.stats = self._fresh_stats()
         self.sched.clear_finished()
+
+    def pop_finished(self) -> List[Result]:
+        """Incrementally retire finished records: return their results
+        and release the records and uid claims.  The open-loop lifecycle
+        seam ``reset_stats``/``clear_finished`` cannot provide: a
+        long-lived server pumps ``step()`` and is *never* idle, so
+        without per-result retirement ``sched.finished`` grows without
+        bound and every uid stays claimed forever.  Works mid-flight;
+        counters are untouched (only records are released)."""
+        return self.sched.pop_finished()
+
+    def cancel(self, uid, *, reason: str = "cancelled") -> bool:
+        """Abort one request wherever it currently lives: not yet
+        arrived (removed from the arrival heap), queued
+        (WAITING/PREEMPTED, rejected), or live in a slot (finished, KV
+        pages released).  Either way the request retires as a finished
+        record with ``finished_reason=reason`` -- retrieved (and its uid
+        claim released) by the next ``pop_finished``.  Returns False
+        when the uid is unknown or already finished.  The HTTP front end
+        maps a client disconnect here, so an abandoned stream cannot
+        hold pages, a slot, or a uid claim."""
+        for i, (t_arr, _, req, _) in enumerate(self._pending):
+            if req.uid == uid:
+                del self._pending[i]
+                heapq.heapify(self._pending)
+                self._pending_uids.discard(uid)
+                self.sched.reject(self.sched.submit(req, t_submit=t_arr),
+                                  reason)
+                return True
+        for t in list(self.sched.waiting):
+            if t.req.uid == uid:
+                self.sched.reject(t, reason)
+                return True
+        for t in self.sched.slots:
+            if t is not None and t.req.uid == uid:
+                self._finish(t, reason)
+                return True
+        return False
 
     def step(self) -> List[Result]:
         """One engine iteration: release due arrivals, admit, advance one
@@ -860,10 +972,6 @@ class Engine:
         RuntimeError.
         """
         self.set_plan(plan if plan is not None else BASE_PLAN)
-        if detok:
-            for r in requests:
-                if not r.detok:
-                    r.detok = detok
         # refuse duplicate uids before anything is submitted: a mid-batch
         # refusal would leave the earlier requests queued (and their uids
         # claimed) with no way to drain them -- the scheduler-level guard
@@ -881,7 +989,9 @@ class Engine:
         t0 = self.clock.now()
         for i, r in enumerate(requests):
             off = arrival_times[i] if arrival_times is not None else 0.0
-            self.submit(r, arrival_time=t0 + off)
+            # detok rides as the workload default, stamped on the Tracked
+            # at release -- never written back onto the caller's Request
+            self.submit(r, arrival_time=t0 + off, detok=detok)
         self.drain(max_steps=max_steps)
         self.stats["wall_s"] = max(self.clock.now() - t0, 0.0)
         # share of prefill-source positions served from cached pages (0.0
@@ -908,7 +1018,11 @@ class Engine:
         """Useful tokens (prompt + generated) per second over the last
         serve().  Positions re-prefilled by preemption recovery are
         accounted separately (``stats["recompute_tokens"]``) -- recompute
-        is overhead, not throughput."""
+        is overhead, not throughput.  Zero wall time (an instant
+        virtual-clock workload, or a server that never ran ``serve()``)
+        reports 0.0, never NaN: the value flows straight into report
+        lines, JSON cells, and ``/v1/stats``, all of which must stay
+        finite."""
         wall = self.stats.get("wall_s", 0.0)
         tok = self.stats["prefill_tokens"] + self.stats["decode_tokens"]
-        return tok / wall if wall > 0 else float("nan")
+        return tok / wall if wall > 0 else 0.0

@@ -274,13 +274,24 @@ class Scheduler:
     def done(self) -> bool:
         return not self.waiting and all(t is None for t in self.slots)
 
+    def pop_finished(self) -> List[Result]:
+        """Retire every finished record: return the results, release the
+        records and their uid claims.  Incremental -- callable while
+        other requests are live or queued -- which is what a never-idle
+        open-loop server needs: ``clear_finished`` only runs at workload
+        boundaries, and without per-result release ``finished`` grows
+        forever and finished uids stay claimed forever."""
+        out = [t.result for t in self.finished]
+        for t in self.finished:
+            self._uids.discard(t.req.uid)
+        self.finished.clear()
+        return out
+
     def clear_finished(self) -> None:
         """Drop per-workload records: finished requests and their uid
         claims (a long-lived engine must not accumulate every past
         prompt/result, and the next workload may reuse the uids)."""
-        for t in self.finished:
-            self._uids.discard(t.req.uid)
-        self.finished.clear()
+        self.pop_finished()
 
     # ------------------------------------------------------------------ #
     # Latency accounting

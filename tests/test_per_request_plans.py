@@ -290,6 +290,23 @@ class TestIncrementalDetok:
         assert seen == out[0].tokens
         assert out[0].text == ""
 
+    def test_serve_detok_never_mutates_caller_requests(self, setup):
+        """serve(detok=) is a workload default stamped on the engine's
+        Tracked record, not written back onto the caller's Request: a
+        request list reused across serves must come back byte-identical
+        -- in particular, the second serve (no detok=) must NOT keep
+        streaming detokenized text because the first one did."""
+        cfg, params = setup
+        reqs = _requests(cfg.vocab_size, (5, 9))
+        assert all(r.detok is False for r in reqs)
+        eng = _plans_engine(cfg, params)
+        out1 = eng.serve(reqs, detok=True)
+        assert all(r.text for r in out1)        # default did apply...
+        assert all(r.detok is False for r in reqs)      # ...without mutation
+        out2 = eng.serve(reqs)                  # re-serve the SAME list
+        assert all(r.text == "" for r in out2)  # detok did not stick
+        assert [r.tokens for r in out2] == [r.tokens for r in out1]
+
     def test_non_prefix_monotone_decode_raises(self):
         dk = IncrementalDetok(lambda ids: str(ids[-1]))
         dk.push(12)
